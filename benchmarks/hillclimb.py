@@ -1,0 +1,43 @@
+"""Perf-iteration driver: recompile one cell, print its roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb <arch> <shape> <tag> [--multi]
+        [--embedding qr]
+
+Writes artifacts/perf/<tag>__<arch>__<shape>__<mesh>.json and prints the
+three terms + dominant + roofline fraction, for the EXPERIMENTS.md §Perf
+log.  Iterations toggle code (constraints, accum, block sizes) between runs.
+"""
+
+import sys
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    multi = "--multi" in sys.argv
+    emb = "qr"
+    for i, a in enumerate(sys.argv):
+        if a == "--embedding":
+            emb = sys.argv[i + 1]
+    arch, shape, tag = args[0], args[1], args[2]
+
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(arch, shape, multi, f"artifacts/perf/{tag}", force=True,
+                   embedding=emb)
+    if not rec.get("ok"):
+        print("FAIL:", rec.get("error"))
+        raise SystemExit(1)
+    from benchmarks.roofline import analyze_cell
+    c = analyze_cell(rec)
+    print(f"[{tag}] {arch}/{shape} mesh={'multi' if multi else 'pod'} emb={emb}")
+    print(f"  compute_t={c['compute_t_s']:.4g}s memory_t={c['memory_t_s']:.4g}s "
+          f"collective_t={c['collective_t_s']:.4g}s dominant={c['dominant']}")
+    print(f"  MODEL/HLO={c['model_over_hlo_flops']:.3f} "
+          f"roofline_frac={c['roofline_frac']:.4f} HBM={c['hbm_fit_gb']:.1f}GB")
+
+
+if __name__ == "__main__":
+    # must set XLA_FLAGS before jax import — reuse dryrun's module-level env
+    import os
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    main()

@@ -1,0 +1,126 @@
+"""One benchmark per paper table/figure (§5), on the seeded synthetic
+Criteo-shaped stream (see DESIGN.md §7 — relative claims, not absolute
+Criteo losses).  Every function returns CSV rows (name, us_per_call,
+derived) and writes a artifact JSON under artifacts/bench/.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.common import Shape
+from repro.train.loop import init_state, make_train_step
+
+ART = "artifacts/bench"
+TRAIN_STEPS = 400
+EVAL_STEPS = 12
+BATCH = 256
+SHAPE = Shape("bench", 1, BATCH, "train")
+
+
+def _train_eval(mod, *, embedding, num_collisions=4, threshold=0, op="mult",
+                steps=TRAIN_STEPS, seed=0, **cfg_kw):
+    """Train a reduced config; return (test_loss, test_acc, n_params, us/step)."""
+    cfg = mod.config(reduced=True, embedding=embedding,
+                     num_collisions=num_collisions, threshold=threshold, op=op,
+                     **cfg_kw)
+    a = mod.api(cfg)
+    params = a.init(jax.random.PRNGKey(seed))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    state = init_state(params, a.optimizer)
+    step = jax.jit(make_train_step(a.loss_fn, a.optimizer))
+    state, m = step(state, a.batch_fn(0, SHAPE))  # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.monotonic()
+    for i in range(1, steps):
+        state, m = step(state, a.batch_fn(i, SHAPE))
+    jax.block_until_ready(m["loss"])
+    us = (time.monotonic() - t0) / max(steps - 1, 1) * 1e6
+    # held-out eval: steps beyond the training range
+    eval_fn = jax.jit(a.loss_fn)
+    losses, accs = [], []
+    for i in range(10_000, 10_000 + EVAL_STEPS):
+        loss, metrics = eval_fn(state["params"], a.batch_fn(i, SHAPE))
+        losses.append(float(loss))
+        accs.append(float(metrics.get("acc", np.nan)))
+    return float(np.mean(losses)), float(np.mean(accs)), n_params, us
+
+
+def _emit(tag, rows):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, tag + ".json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def _paper_kinds(op_list=("hash", "mult", "add", "concat", "feature")):
+    for kind in op_list:
+        if kind == "hash":
+            yield "hash", "hash", "mult"
+        elif kind == "feature":
+            yield "feature", "feature", "mult"
+        else:
+            yield kind, "qr", kind
+
+
+def fig4():
+    """Fig.4: full vs hashing trick vs QR (mult) on DLRM + DCN (4 collisions)."""
+    from repro.configs import dcn_criteo, dlrm_criteo
+    rows, art = [], {}
+    for net, mod in (("dlrm", dlrm_criteo), ("dcn", dcn_criteo)):
+        for name, kind in (("full", "full"), ("hash", "hash"), ("qr_mult", "qr")):
+            loss, acc, n, us = _train_eval(mod, embedding=kind, num_collisions=4)
+            rows.append((f"fig4/{net}/{name}", us, f"test_loss={loss:.4f}"))
+            art[f"{net}/{name}"] = {"loss": loss, "acc": acc, "params": n}
+    _emit("fig4", art)
+    return rows
+
+
+def fig5():
+    """Fig.5: params vs test loss across collision counts × operations."""
+    from repro.configs import dlrm_criteo
+    rows, art = [], {}
+    base_loss, _, base_n, us = _train_eval(dlrm_criteo, embedding="full")
+    art["full/0"] = {"loss": base_loss, "params": base_n}
+    rows.append(("fig5/dlrm/full/c0", us, f"test_loss={base_loss:.4f}"))
+    for c in (2, 4, 60):
+        for label, kind, op in _paper_kinds():
+            loss, acc, n, us = _train_eval(dlrm_criteo, embedding=kind,
+                                           num_collisions=c, op=op)
+            art[f"{label}/{c}"] = {"loss": loss, "acc": acc, "params": n}
+            rows.append((f"fig5/dlrm/{label}/c{c}", us,
+                         f"test_loss={loss:.4f};params={n}"))
+    _emit("fig5", art)
+    return rows
+
+
+def fig6():
+    """Fig.6/Table 4: thresholding sweep at 4 collisions (mult op)."""
+    from repro.configs import dlrm_criteo
+    rows, art = [], {}
+    for thr in (0, 200, 2000, 20000):
+        loss, acc, n, us = _train_eval(dlrm_criteo, embedding="qr",
+                                       num_collisions=4, threshold=thr)
+        art[str(thr)] = {"loss": loss, "acc": acc, "params": n}
+        rows.append((f"fig6/dlrm/qr_mult/thr{thr}", us,
+                     f"test_loss={loss:.4f};params={n}"))
+    _emit("fig6", art)
+    return rows
+
+
+def table1():
+    """Table 1/2: path-based compositional embeddings, MLP width sweep."""
+    from repro.configs import dlrm_criteo
+    rows, art = [], {}
+    for hidden in (16, 32, 64, 128):
+        loss, acc, n, us = _train_eval(dlrm_criteo, embedding="path",
+                                       num_collisions=4, path_hidden=hidden)
+        art[str(hidden)] = {"loss": loss, "acc": acc, "params": n}
+        rows.append((f"table1/dlrm/path/h{hidden}", us,
+                     f"test_loss={loss:.4f};params={n}"))
+    _emit("table1", art)
+    return rows

@@ -1,0 +1,137 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh) cell, derive the three roofline terms from the
+compiled per-chip program (hardware: TPU v5e):
+
+    compute_t    = HLO_FLOPs_per_chip / 197 TFLOP/s
+    memory_t     = HLO_bytes_per_chip / 819 GB/s
+    collective_t = wire_bytes_per_chip / 50 GB/s (ICI link)
+
+FLOPs/bytes come from the scan-aware HLO analyzer (launch/hlo_analysis.py —
+XLA's own cost_analysis does not multiply while bodies).  MODEL_FLOPS uses
+exact parameter counts from the config (6·N·D train, 2·N·D inference, N
+excluding embedding-table rows, MoE counting active experts only), so the
+ratio MODEL/HLO exposes remat and padding waste.  The reported
+``roofline_frac`` is useful-compute time over the dominant term — an upper
+bound on achievable MFU for this lowering.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from functools import lru_cache
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@lru_cache(maxsize=None)
+def model_flops_coeffs(arch: str):
+    """(N_dense_active, N_embed) parameter counts for the MODEL_FLOPS term."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.optim.optimizers import leaf_paths
+    mod = get_arch(arch)
+    cfg = mod.config()
+    api = mod.api(cfg)
+    structs = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    paths = leaf_paths(structs)
+    leaves = jax.tree.leaves(structs)
+    n_embed = n_moe = n_other = 0
+    for p, l in zip(paths, leaves):
+        n = int(np.prod(l.shape))
+        if "embed/" in p or p.startswith("embed"):
+            n_embed += n
+        elif "/moe/w" in p:
+            n_moe += n
+        else:
+            n_other += n
+    moe_cfg = getattr(cfg, "moe", None)
+    active_frac = (moe_cfg.top_k / moe_cfg.n_experts) if moe_cfg else 0.0
+    n_active = n_other + n_moe * active_frac
+    return n_active, n_embed
+
+
+def model_flops(arch: str, shape_name: str, devices: int) -> float:
+    from repro.configs import SHAPES
+    shape = SHAPES[shape_name]
+    n_active, _ = model_flops_coeffs(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        total = 2.0 * n_active * tokens
+    return total / devices
+
+
+def analyze_cell(record: dict) -> dict:
+    fl = record["flops_per_chip"]
+    hbm = record["hbm_bytes_per_chip"]
+    coll = record["collective_wire_bytes_per_chip"]
+    terms = {"compute": fl / PEAK_FLOPS, "memory": hbm / HBM_BW,
+             "collective": coll / ICI_BW}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(record["arch"], record["shape"], record["devices"])
+    useful_t = mf / PEAK_FLOPS
+    bound_t = max(terms.values())
+    return {
+        "arch": record["arch"], "shape": record["shape"], "mesh": record["mesh"],
+        "compute_t_s": terms["compute"], "memory_t_s": terms["memory"],
+        "collective_t_s": terms["collective"], "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "model_over_hlo_flops": mf / fl if fl else 0.0,
+        "roofline_frac": useful_t / bound_t if bound_t else 0.0,
+        "hbm_fit_gb": (record["memory_analysis"].get("argument_size_in_bytes", 0)
+                       + record["memory_analysis"].get(
+                           "temp_tpu_expected_bytes",
+                           record["memory_analysis"].get("temp_size_in_bytes", 0))) / 2**30,
+    }
+
+
+def load_cells(art_dir: str = "artifacts/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("ok"):
+            out.append(analyze_cell(r))
+    return out
+
+
+def rows(art_dir: str = "artifacts/dryrun"):
+    """CSV rows for benchmarks/run.py (single-pod mesh = the §Roofline table)."""
+    cells = load_cells(art_dir)
+    out = []
+    for c in cells:
+        if "multipod" in c["mesh"]:
+            continue
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        bound_ms = max(c["compute_t_s"], c["memory_t_s"], c["collective_t_s"]) * 1e3
+        out.append((name, round(bound_ms * 1e3, 1),
+                    f"dominant={c['dominant']};frac={c['roofline_frac']:.3f}"))
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/roofline.json", "w") as f:
+        json.dump(cells, f, indent=1)
+    return out
+
+
+def markdown_table(art_dir: str = "artifacts/dryrun", mesh_filter: str = "pod_16x16"):
+    cells = [c for c in load_cells(art_dir) if c["mesh"] == mesh_filter]
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO | roofline frac | HBM GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_t_s']:.3g} | "
+            f"{c['memory_t_s']:.3g} | {c['collective_t_s']:.3g} | {c['dominant']} | "
+            f"{c['model_over_hlo_flops']:.2f} | {c['roofline_frac']:.3f} | "
+            f"{c['hbm_fit_gb']:.1f} |")
+    return "\n".join(lines)

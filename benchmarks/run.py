@@ -1,0 +1,31 @@
+"""Benchmark harness — one section per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  Paper experiments run on the
+seeded synthetic Criteo-shaped stream at reduced scale (CPU container);
+EXPERIMENTS.md compares the trends against the paper's absolute numbers.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sections = []
+    from . import kernels_bench, paper_tables, roofline
+
+    print("name,us_per_call,derived")
+    for fn in (paper_tables.fig4, paper_tables.fig5, paper_tables.fig6,
+               paper_tables.table1, kernels_bench.rows, roofline.rows):
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness running; surface the error
+            rows = [(f"{fn.__module__}.{fn.__name__}/ERROR", 0, repr(e)[:120])]
+        for name, us, derived in rows:
+            print(f"{name},{us},{derived}")
+            sys.stdout.flush()
+        sections.append(fn.__name__)
+
+
+if __name__ == "__main__":
+    main()

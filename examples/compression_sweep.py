@@ -1,0 +1,48 @@
+"""Compression-vs-quality sweep (the paper's core trade-off, Fig. 5).
+
+Trains a DLRM at several collision counts and operations, printing the
+params/loss frontier.  A miniature of benchmarks/paper_tables.fig5.
+
+Run: PYTHONPATH=src python examples/compression_sweep.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import EmbeddingSpec
+from repro.data.criteo import CriteoSpec, batch_at
+from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn, dlrm_num_params
+from repro.optim.optimizers import adagrad
+from repro.train.loop import init_state, make_train_step
+
+SIZES = (1000, 200, 50000, 12000, 31, 24, 12517, 633, 3, 931)
+SPEC = CriteoSpec(table_sizes=SIZES, zipf=1.5, noise=0.5)
+
+
+def run(embedding: EmbeddingSpec, steps=250, batch=256):
+    cfg = DLRMConfig(table_sizes=SIZES, embedding=embedding)
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    opt = adagrad(1e-2)
+    state = init_state(params, opt)
+    step = jax.jit(make_train_step(lambda p, b: dlrm_loss_fn(p, b, cfg), opt))
+    for i in range(steps):
+        state, _ = step(state, batch_at(0, i, batch, SPEC))
+    ev = jax.jit(lambda p, b: dlrm_loss_fn(p, b, cfg))
+    loss = np.mean([float(ev(state["params"], batch_at(0, i, batch, SPEC))[0])
+                    for i in range(10_000, 10_008)])
+    return dlrm_num_params(cfg), loss
+
+
+def main():
+    n0, l0 = run(EmbeddingSpec(kind="full"))
+    print(f"{'treatment':22s} {'params':>10s} {'ratio':>6s} {'loss':>8s}")
+    print(f"{'full':22s} {n0:>10,} {1.0:>6.1f} {l0:>8.4f}")
+    for c in (2, 4, 16):
+        for kind, op in (("hash", "mult"), ("qr", "mult"), ("qr", "concat")):
+            n, l = run(EmbeddingSpec(kind=kind, num_collisions=c, op=op))
+            name = f"{kind}-{op}/c{c}" if kind == "qr" else f"hash/c{c}"
+            print(f"{name:22s} {n:>10,} {n0 / n:>6.1f} {l:>8.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,389 @@
+"""Shared machinery for architecture configs: the ModelApi adapter layer,
+input-spec builders (ShapeDtypeStructs with production shardings), and the
+assigned shape grid.
+
+Every ``configs/<arch>.py`` exposes:
+    ARCH, FAMILY
+    config(reduced=False, embedding="qr") -> cfg dataclass
+    api(cfg) -> ModelApi
+
+The dry-run consumes ``lowerables(api, shape_name, mesh)`` which returns the
+(callable, sharded arg structs) pairs per shape kind:
+    train_*    → train_step(state, batch)
+    prefill_*  → prefill(params, *inputs, cache)
+    decode_* / long_* → decode_step(params, tokens, pos, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import batch_axes, spec_for, tree_shardings
+from ..optim import optimizers as opt_mod
+from ..optim.optimizers import leaf_paths
+from ..train.loop import make_train_step
+
+__all__ = ["SHAPES", "Shape", "ModelApi", "lowerables", "sds", "cache_spec",
+           "batch_sharding", "param_structs", "state_structs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass
+class ModelApi:
+    name: str
+    cfg: Any
+    init: Callable                      # key -> params
+    loss_fn: Callable                   # (params, batch) -> (loss, metrics)
+    optimizer: Any                      # repro Optimizer
+    train_batch: Callable               # (shape: Shape) -> batch struct dict
+    accum: int = 1                      # gradient-accumulation microbatches
+    accum_dtype: str = "float32"        # grad accumulator dtype (bf16 for 100B+)
+    prefill_inputs: Optional[Callable] = None   # (shape) -> tuple of structs (pre-cache)
+    prefill: Optional[Callable] = None          # (params, *inputs, cache)
+    make_cache: Optional[Callable] = None       # (batch, max_len) -> cache
+    decode: Optional[Callable] = None           # (params, tokens, pos, cache)
+    sub_quadratic: bool = False                 # may run long_500k
+    batch_fn: Optional[Callable] = None         # (step, shape) -> real batch (smoke)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ------------------------------------------------------------------ shardings
+
+
+def batch_sharding(mesh):
+    return batch_axes(mesh)
+
+
+def _with(mesh, struct, spec):
+    return jax.ShapeDtypeStruct(struct.shape, struct.dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_like_spec(shape, batch, mesh):
+    """Spec for batch-shaped inputs: batch dim over (pod,)data, rest replicated."""
+    dp = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+    spec = [None] * len(shape)
+    if shape and shape[0] % n == 0 and shape[0] >= n:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)
+
+
+def cache_spec(shape, batch, mesh, prefer_last: bool = False):
+    """KV/state-cache sharding: stack dims unsharded, batch→data, one more
+    dim→model.
+
+    decode (default): the *largest* divisible dim takes ``model`` (usually
+    the sequence axis — decode reads the whole cache, writes one slot).
+
+    prefill (``prefer_last``): the *last* divisible dim takes ``model``
+    (head/latent axis) — prefill writes the full sequence, and an S-sharded
+    cache would force GSPMD to materialise a replicated copy at the
+    dynamic-update-slice (measured +7.5 GB/chip on deepseek prefill_32k).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = batch_axes(mesh)
+    dp_n = int(np.prod([sizes[a] for a in dp]))
+    model_n = sizes.get("model", 1)
+    spec: list = [None] * len(shape)
+    try:
+        bi = list(shape).index(batch)
+    except ValueError:
+        bi = None
+    data_placed = False
+    if bi is not None and shape[bi] % dp_n == 0 and shape[bi] >= dp_n:
+        spec[bi] = dp if len(dp) > 1 else dp[0]
+        data_placed = True
+    cand = [i for i in range(len(shape)) if i != bi and spec[i] is None]
+    if prefer_last:
+        cand.sort(key=lambda i: -i)  # rightmost (feature/head) dims first
+    else:
+        cand.sort(key=lambda i: -shape[i])
+    for i in cand:
+        if not data_placed and not prefer_last \
+                and shape[i] % (dp_n * model_n) == 0 and shape[i] >= dp_n * model_n:
+            spec[i] = tuple(dp) + ("model",)
+            data_placed = True
+            break
+        if shape[i] % model_n == 0 and shape[i] >= model_n:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def _tree_with_specs(mesh, structs, spec_fn):
+    leaves, treedef = jax.tree.flatten(structs)
+    out = [_with(mesh, l, spec_fn(l.shape)) for l in leaves]
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_structs(api: ModelApi, mesh, overrides=None):
+    structs = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    shardings = tree_shardings(structs, mesh, overrides)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        structs, shardings)
+
+
+def _opt_sharding_like(pstructs, ostructs, mesh):
+    """Optimizer-state shardings follow their parameter's spec where shapes
+    allow (same-rank prefix match), else drop the incompatible axes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_leaves = jax.tree.leaves(pstructs)
+    p_paths = leaf_paths(pstructs)
+    p_specs = [spec_for(path, l.shape, mesh) for path, l in zip(p_paths, p_leaves)]
+
+    def fit(spec, shape):
+        out = []
+        for i, dim in enumerate(shape):
+            ax = spec[i] if i < len(spec) else None
+            if ax is None:
+                out.append(None)
+                continue
+            n = int(np.prod([sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+            out.append(ax if (dim % n == 0 and dim >= n) else None)
+        return P(*out)
+
+    # opt state is a list parallel to param leaves: state[i] is a dict of arrays
+    out_state = []
+    for i, leaf_state in enumerate(ostructs):
+        spec = p_specs[i]
+        out_state.append(jax.tree.map(
+            lambda l: _with(mesh, l, fit(spec, l.shape)), leaf_state))
+    return out_state
+
+
+def state_structs(api: ModelApi, mesh):
+    """Sharded ShapeDtypeStructs for the full train state."""
+    pstructs = param_structs(api, mesh)
+    ostructs = jax.eval_shape(api.optimizer.init, pstructs)
+    ostructs = _opt_sharding_like(pstructs, ostructs, mesh)
+    step = _with(mesh, sds((), jnp.int32), P())
+    return {"params": pstructs, "opt": ostructs, "step": step}
+
+
+# ------------------------------------------------------------------ lowerables
+
+
+def lowerables(api: ModelApi, shape_name: str, mesh):
+    """(callable, ordered arg structs) for one (arch × shape × mesh) cell."""
+    from ..dist.sharding import set_batch_shard_axes
+    set_batch_shard_axes(batch_axes(mesh), model_size=dict(
+        zip(mesh.axis_names, mesh.devices.shape)).get("model", 1))
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        state = state_structs(api, mesh)
+        batch = api.train_batch(shape)
+        batch = _tree_with_specs(mesh, batch, lambda s: _batch_like_spec(s, shape.global_batch, mesh))
+        step = make_train_step(api.loss_fn, api.optimizer, accum=api.accum,
+                               accum_dtype=jnp.dtype(api.accum_dtype))
+        return step, (state, batch)
+
+    from ..dist.sharding import INFERENCE_OVERRIDES
+    params = param_structs(api, mesh, overrides=INFERENCE_OVERRIDES)
+    if shape.kind == "prefill":
+        inputs = api.prefill_inputs(shape)
+        inputs = _tree_with_specs(mesh, inputs, lambda s: _batch_like_spec(s, shape.global_batch, mesh))
+        cache = jax.eval_shape(lambda: api.make_cache(shape.global_batch, shape.seq_len))
+        cache = _tree_with_specs(mesh, cache, lambda s: cache_spec(
+            s, shape.global_batch, mesh, prefer_last=True))
+        return api.prefill, (params,) + tuple(inputs) + (cache,)
+
+    # decode: one new token with a cache of seq_len
+    tokens = _with(mesh, sds((shape.global_batch, 1), jnp.int32),
+                   _batch_like_spec((shape.global_batch, 1), shape.global_batch, mesh))
+    pos = _with(mesh, sds((), jnp.int32), P())
+    cache = jax.eval_shape(lambda: api.make_cache(shape.global_batch, shape.seq_len))
+    cache = _tree_with_specs(mesh, cache, lambda s: cache_spec(s, shape.global_batch, mesh))
+    return api.decode, (params, tokens, pos, cache)
+
+
+# ------------------------------------------------------------------ LM family
+
+
+def lm_train_batch(cfg, shape: Shape):
+    b, s = shape.global_batch, shape.seq_len
+    return {"tokens": sds((b, s), jnp.int32), "labels": sds((b, s), jnp.int32),
+            "mask": sds((b, s), jnp.float32)}
+
+
+def default_optimizer(n_params_billion: float):
+    """Adam below ~30B params; Adafactor above (state must fit HBM)."""
+    if n_params_billion >= 30:
+        return opt_mod.adafactor(1e-3)
+    return opt_mod.adam(3e-4)
+
+
+def default_accum(n_params_billion: float) -> int:
+    """Gradient-accumulation microbatches for train_4k (batch 256)."""
+    if n_params_billion >= 30:
+        return 8
+    if n_params_billion >= 1:
+        return 2
+    return 1
+
+
+def lm_api(cfg, n_params_billion: float, accum: int | None = None) -> ModelApi:
+    from ..data import lm as lm_data
+    from ..models import lm as lm_mod
+    return ModelApi(
+        name=cfg.name, cfg=cfg,
+        init=lambda key: lm_mod.init(key, cfg),
+        loss_fn=lambda p, b: lm_mod.loss_fn(p, b, cfg),
+        optimizer=default_optimizer(n_params_billion),
+        accum=default_accum(n_params_billion) if accum is None else accum,
+        accum_dtype="bfloat16" if n_params_billion >= 100 else "float32",
+        train_batch=lambda shape: lm_train_batch(cfg, shape),
+        prefill_inputs=lambda shape: (sds((shape.global_batch, shape.seq_len), jnp.int32),),
+        prefill=lambda params, tokens, cache: lm_mod.prefill(params, tokens, cache, cfg),
+        make_cache=lambda b, ml: lm_mod.make_decode_cache(cfg, b, ml),
+        decode=lambda params, tokens, pos, cache: lm_mod.decode_step(
+            params, tokens, pos, cache, cfg),
+        sub_quadratic=False,
+        batch_fn=lambda step, shape: lm_data.batch_at(
+            0, step, shape.global_batch, shape.seq_len, cfg.vocab))
+
+
+def mamba_api(cfg, n_params_billion: float, accum: int | None = None) -> ModelApi:
+    from ..data import lm as lm_data
+    from ..models import hybrid as hy
+    return ModelApi(
+        name=cfg.name, cfg=cfg,
+        init=lambda key: hy.mamba_init(key, cfg),
+        loss_fn=lambda p, b: hy.mamba_loss_fn(p, b, cfg),
+        optimizer=default_optimizer(n_params_billion),
+        accum=default_accum(n_params_billion) if accum is None else accum,
+        train_batch=lambda shape: lm_train_batch(cfg, shape),
+        prefill_inputs=lambda shape: (sds((shape.global_batch, shape.seq_len), jnp.int32),),
+        prefill=lambda params, tokens, cache: hy.mamba_prefill(params, tokens, cache, cfg),
+        make_cache=lambda b, ml: hy.mamba_make_cache(cfg, b, ml),
+        decode=lambda params, tokens, pos, cache: hy.mamba_decode_step(
+            params, tokens, pos, cache, cfg),
+        sub_quadratic=True,
+        batch_fn=lambda step, shape: lm_data.batch_at(
+            0, step, shape.global_batch, shape.seq_len, cfg.vocab))
+
+
+def hybrid_api(cfg, n_params_billion: float, accum: int | None = None) -> ModelApi:
+    from ..data import lm as lm_data
+    from ..models import hybrid as hy
+    return ModelApi(
+        name=cfg.name, cfg=cfg,
+        init=lambda key: hy.hybrid_init(key, cfg),
+        loss_fn=lambda p, b: hy.hybrid_loss_fn(p, b, cfg),
+        optimizer=default_optimizer(n_params_billion),
+        accum=default_accum(n_params_billion) if accum is None else accum,
+        train_batch=lambda shape: lm_train_batch(cfg, shape),
+        prefill_inputs=lambda shape: (sds((shape.global_batch, shape.seq_len), jnp.int32),),
+        prefill=lambda params, tokens, cache: hy.hybrid_prefill(params, tokens, cache, cfg),
+        make_cache=lambda b, ml: hy.hybrid_make_cache(cfg, b, ml),
+        decode=lambda params, tokens, pos, cache: hy.hybrid_decode_step(
+            params, tokens, pos, cache, cfg),
+        sub_quadratic=True,
+        batch_fn=lambda step, shape: lm_data.batch_at(
+            0, step, shape.global_batch, shape.seq_len, cfg.vocab))
+
+
+def encdec_api(cfg, n_params_billion: float, accum: int | None = None) -> ModelApi:
+    from ..data import lm as lm_data
+    from ..models import encdec as ed
+
+    def train_batch(shape: Shape):
+        b, s = shape.global_batch, shape.seq_len
+        return {"frames": sds((b, s // cfg.enc_ratio, cfg.d_model), jnp.bfloat16),
+                "tokens": sds((b, s), jnp.int32), "labels": sds((b, s), jnp.int32),
+                "mask": sds((b, s), jnp.float32)}
+
+    def batch_fn(step, shape: Shape):
+        b = lm_data.batch_at(0, step, shape.global_batch, shape.seq_len, cfg.vocab)
+        b["frames"] = lm_data.frames_at(0, step, shape.global_batch,
+                                        max(1, shape.seq_len // cfg.enc_ratio),
+                                        cfg.d_model).astype(jnp.bfloat16)
+        return b
+
+    return ModelApi(
+        name=cfg.name, cfg=cfg,
+        init=lambda key: ed.encdec_init(key, cfg),
+        loss_fn=lambda p, b: ed.encdec_loss_fn(p, b, cfg),
+        optimizer=default_optimizer(n_params_billion),
+        accum=default_accum(n_params_billion) if accum is None else accum,
+        train_batch=train_batch,
+        prefill_inputs=lambda shape: (
+            sds((shape.global_batch, shape.seq_len // cfg.enc_ratio, cfg.d_model),
+                jnp.bfloat16),
+            sds((shape.global_batch, shape.seq_len), jnp.int32)),
+        prefill=lambda params, frames, tokens, cache: ed.encdec_prefill(
+            params, frames, tokens, cache, cfg),
+        make_cache=lambda b, ml: ed.encdec_make_cache(cfg, b, ml),
+        decode=lambda params, tokens, pos, cache: ed.encdec_decode_step(
+            params, tokens, pos, cache, cfg),
+        sub_quadratic=False,
+        batch_fn=batch_fn)
+
+
+def vlm_api(cfg, n_params_billion: float, accum: int | None = None) -> ModelApi:
+    from ..data import lm as lm_data
+    from ..models import vlm as vl
+
+    def train_batch(shape: Shape):
+        b = shape.global_batch
+        st = shape.seq_len - cfg.n_patches
+        return {"patches": sds((b, cfg.n_patches, cfg.lm.d_model), jnp.bfloat16),
+                "tokens": sds((b, st), jnp.int32), "labels": sds((b, st), jnp.int32),
+                "mask": sds((b, st), jnp.float32)}
+
+    def batch_fn(step, shape: Shape):
+        st = shape.seq_len - cfg.n_patches
+        b = lm_data.batch_at(0, step, shape.global_batch, st, cfg.lm.vocab)
+        b["patches"] = lm_data.patches_at(0, step, shape.global_batch,
+                                          cfg.n_patches, cfg.lm.d_model).astype(jnp.bfloat16)
+        return b
+
+    return ModelApi(
+        name=cfg.name, cfg=cfg,
+        init=lambda key: vl.vlm_init(key, cfg),
+        loss_fn=lambda p, b: vl.vlm_loss_fn(p, b, cfg),
+        optimizer=default_optimizer(n_params_billion),
+        accum=default_accum(n_params_billion) if accum is None else accum,
+        train_batch=train_batch,
+        prefill_inputs=lambda shape: (
+            sds((shape.global_batch, cfg.n_patches, cfg.lm.d_model), jnp.bfloat16),
+            sds((shape.global_batch, shape.seq_len - cfg.n_patches), jnp.int32)),
+        prefill=lambda params, patches, tokens, cache: vl.vlm_prefill(
+            params, patches, tokens, cache, cfg),
+        make_cache=lambda b, ml: vl.vlm_make_cache(cfg, b, ml),
+        decode=lambda params, tokens, pos, cache: vl.vlm_decode_step(
+            params, tokens, pos, cache, cfg),
+        sub_quadratic=False,
+        batch_fn=batch_fn)
+
+
+def embedding_spec(embedding: str, num_collisions: int = 4):
+    from ..core import EmbeddingSpec, factory
+    kind = embedding if embedding in factory.KINDS else "qr"
+    return EmbeddingSpec(kind=kind, num_collisions=num_collisions, op="mult")

@@ -1,0 +1,40 @@
+"""Deep & Cross Network on Criteo — the paper's second §5 model (6 cross
+layers, deep 512-256-64, D=16)."""
+import jax.numpy as jnp
+
+from ..data.criteo import KAGGLE_TABLE_SIZES, CriteoSpec, batch_at
+from ..models.dcn import DCNConfig, dcn_init, dcn_loss_fn
+from ..optim import optimizers as opt
+from .common import ModelApi, embedding_spec, sds
+from .dlrm_criteo import REDUCED_SIZES
+
+ARCH, FAMILY, PARAMS_B = "dcn-criteo", "rec", 0.54
+
+
+def config(reduced: bool = False, embedding: str = "qr", num_collisions: int = 4,
+           threshold: int = 0, op: str = "mult", path_hidden: int = 64):
+    emb = embedding_spec(embedding, num_collisions)
+    import dataclasses
+    emb = dataclasses.replace(emb, threshold=threshold, op=op,
+                              path_hidden=path_hidden)
+    sizes = REDUCED_SIZES if reduced else KAGGLE_TABLE_SIZES
+    return DCNConfig(name=ARCH, table_sizes=sizes, emb_dim=16, cross_layers=6,
+                     deep_mlp=(512, 256, 64), embedding=emb)
+
+
+def api(cfg):
+    spec = CriteoSpec(table_sizes=cfg.table_sizes, zipf=1.5, noise=0.5)
+
+    def train_batch(shape):
+        b = shape.global_batch
+        return {"dense": sds((b, 13), jnp.float32),
+                "sparse": sds((b, len(cfg.table_sizes)), jnp.int32),
+                "label": sds((b,), jnp.float32)}
+
+    return ModelApi(
+        name=cfg.name, cfg=cfg,
+        init=lambda key: dcn_init(key, cfg),
+        loss_fn=lambda p, b: dcn_loss_fn(p, b, cfg),
+        optimizer=opt.adam(1e-3, amsgrad=True),  # AMSGrad: paper's best for mult
+        train_batch=train_batch,
+        batch_fn=lambda step, shape: batch_at(0, step, shape.global_batch, spec))

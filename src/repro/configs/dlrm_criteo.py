@@ -1,0 +1,41 @@
+"""Facebook DLRM on Criteo — the paper's own §5 model (bottom 512-256-64,
+top 512-256, D=16)."""
+import jax.numpy as jnp
+
+from ..data.criteo import KAGGLE_TABLE_SIZES, CriteoSpec, batch_at
+from ..models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn
+from ..optim import optimizers as opt
+from .common import ModelApi, embedding_spec, sds
+
+ARCH, FAMILY, PARAMS_B = "dlrm-criteo", "rec", 0.54
+
+REDUCED_SIZES = (1000, 200, 50000, 12000, 31, 24, 12517, 633, 3, 931)
+
+
+def config(reduced: bool = False, embedding: str = "qr", num_collisions: int = 4,
+           threshold: int = 0, op: str = "mult", path_hidden: int = 64):
+    emb = embedding_spec(embedding, num_collisions)
+    import dataclasses
+    emb = dataclasses.replace(emb, threshold=threshold, op=op,
+                              path_hidden=path_hidden)
+    sizes = REDUCED_SIZES if reduced else KAGGLE_TABLE_SIZES
+    return DLRMConfig(name=ARCH, table_sizes=sizes, emb_dim=16,
+                      bottom_mlp=(512, 256, 64), top_mlp=(512, 256), embedding=emb)
+
+
+def api(cfg):
+    spec = CriteoSpec(table_sizes=cfg.table_sizes, zipf=1.5, noise=0.5)
+
+    def train_batch(shape):
+        b = shape.global_batch
+        return {"dense": sds((b, 13), jnp.float32),
+                "sparse": sds((b, len(cfg.table_sizes)), jnp.int32),
+                "label": sds((b,), jnp.float32)}
+
+    return ModelApi(
+        name=cfg.name, cfg=cfg,
+        init=lambda key: dlrm_init(key, cfg),
+        loss_fn=lambda p, b: dlrm_loss_fn(p, b, cfg),
+        optimizer=opt.adagrad(1e-2),  # the paper's optimizer
+        train_batch=train_batch,
+        batch_fn=lambda step, shape: batch_at(0, step, shape.global_batch, spec))

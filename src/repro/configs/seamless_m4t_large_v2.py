@@ -1,0 +1,23 @@
+"""seamless-m4t-large-v2: enc-dec audio->text, vocab 256,206 (the most
+embedding-dominated assigned arch). [arXiv:2308.11596; hf]"""
+from ..models.encdec import EncDecConfig
+from .common import embedding_spec, encdec_api
+
+ARCH, FAMILY, PARAMS_B = "seamless-m4t-large-v2", "audio", 1.9
+
+
+def config(reduced: bool = False, embedding: str = "qr", num_collisions: int = 4):
+    emb = embedding_spec(embedding, num_collisions)
+    if reduced:
+        return EncDecConfig(name=ARCH, vocab=512, d_model=64, enc_layers=2,
+                            dec_layers=2, n_heads=4, n_kv_heads=2, d_head=16,
+                            d_ff=128, enc_ratio=4, embedding=emb,
+                            param_dtype="float32", compute_dtype="float32",
+                            xent_chunk=16)
+    return EncDecConfig(name=ARCH, vocab=256206, d_model=1024, enc_layers=24,
+                        dec_layers=24, n_heads=16, n_kv_heads=16, d_head=64,
+                        d_ff=8192, enc_ratio=4, embedding=emb)
+
+
+def api(cfg):
+    return encdec_api(cfg, PARAMS_B, accum=8)

@@ -1,0 +1,201 @@
+"""Operation-based compositional embeddings (paper §2, §4).
+
+Functional modules: frozen-dataclass configs with ``init(key) -> params``
+(a dict of jnp arrays) and ``apply(params, idx) -> embeddings``.  All
+``apply`` methods accept arbitrary-rank integer index arrays and return
+``idx.shape + (dim,)`` activations, and are jit/vmap/pjit friendly.
+
+Pooled ("bag") lookups for multi-hot features sum masked rows; the fused
+Pallas TPU kernels in ``repro.kernels`` implement the same contracts (their
+``ref.py`` oracles call into this module).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .partitions import Partition, naive_partition, qr_partitions
+
+__all__ = [
+    "FullEmbedding",
+    "HashEmbedding",
+    "CompositionalEmbedding",
+    "qr_embedding",
+    "bag_pool",
+]
+
+OPS = ("mult", "add", "concat")
+
+
+def _uniform(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, minval=-scale, maxval=scale, dtype=dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class FullEmbedding:
+    """The baseline |S| x D table (paper Fig. 1 / 'Full')."""
+
+    num_categories: int
+    dim: int
+    param_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        scale = (1.0 / self.num_categories) ** 0.5
+        return {"table": _uniform(key, (self.num_categories, self.dim), scale, self.param_dtype)}
+
+    def apply(self, params, idx):
+        return jnp.take(params["table"], idx, axis=0)
+
+    @property
+    def num_params(self) -> int:
+        return self.num_categories * self.dim
+
+    @property
+    def out_dim(self) -> int:
+        return self.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class HashEmbedding:
+    """Hashing trick (paper Alg. 1): ``x -> table[x mod m]`` — lossy baseline."""
+
+    num_categories: int
+    dim: int
+    m: int = 1
+    param_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        scale = (1.0 / self.num_categories) ** 0.5
+        return {"table": _uniform(key, (self.m, self.dim), scale, self.param_dtype)}
+
+    def apply(self, params, idx):
+        return jnp.take(params["table"], jnp.asarray(idx) % self.m, axis=0)
+
+    @property
+    def num_params(self) -> int:
+        return self.m * self.dim
+
+    @property
+    def out_dim(self) -> int:
+        return self.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositionalEmbedding:
+    """Operation-based compositional embedding over complementary partitions.
+
+    One table per partition (rows = that partition's bucket count); per-index
+    rows are combined with ``op`` in {mult, add, concat} (paper eq. 6).  With
+    the QR pair this is exactly Algorithm 2.  ``dims`` gives each table's
+    embedding width: for mult/add all must equal ``dim``; for concat they
+    must sum to ``dim`` (defaults to an even split).
+    """
+
+    num_categories: int
+    dim: int
+    partitions: tuple[Partition, ...] = ()
+    op: str = "mult"
+    dims: tuple[int, ...] = ()
+    param_dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"op={self.op!r} not in {OPS}")
+        if not self.partitions:
+            raise ValueError("need at least one partition")
+        k = len(self.partitions)
+        if not self.dims:
+            if self.op == "concat":
+                base = self.dim // k
+                dims = [base] * k
+                dims[-1] += self.dim - base * k
+            else:
+                dims = [self.dim] * k
+            object.__setattr__(self, "dims", tuple(dims))
+        if self.op == "concat":
+            if sum(self.dims) != self.dim:
+                raise ValueError(f"concat dims {self.dims} must sum to {self.dim}")
+        elif any(d != self.dim for d in self.dims):
+            raise ValueError(f"{self.op} requires all dims == {self.dim}, got {self.dims}")
+
+    def init(self, key):
+        # Matches the reference DLRM QR implementation: every table is drawn
+        # uniform(-sqrt(1/|S|), sqrt(1/|S|)).  For `mult` the product of k
+        # such rows has scale |S|^{-k/2}; we compensate so the *combined*
+        # embedding matches the full table's scale (important for training
+        # parity — confirmed by the Fig.4-style benchmark).
+        keys = jax.random.split(key, len(self.partitions))
+        scale = (1.0 / self.num_categories) ** 0.5
+        if self.op == "mult":
+            scale = scale ** (1.0 / len(self.partitions))
+        return {
+            f"table_{j}": _uniform(k, (p.num_buckets, d), scale, self.param_dtype)
+            for j, (p, d, k) in enumerate(zip(self.partitions, self.dims, keys))
+        }
+
+    def partition_embeddings(self, params, idx):
+        """Per-partition rows (the 'feature generation' mode, paper §4)."""
+        idx = jnp.asarray(idx)
+        return [
+            jnp.take(params[f"table_{j}"], p.bucket(idx), axis=0)
+            for j, p in enumerate(self.partitions)
+        ]
+
+    def apply(self, params, idx):
+        zs = self.partition_embeddings(params, idx)
+        if self.op == "concat":
+            return jnp.concatenate(zs, axis=-1)
+        if self.op == "add":
+            return sum(zs[1:], zs[0])
+        out = zs[0]
+        for z in zs[1:]:
+            out = out * z
+        return out
+
+    @property
+    def num_params(self) -> int:
+        return sum(p.num_buckets * d for p, d in zip(self.partitions, self.dims))
+
+    @property
+    def out_dim(self) -> int:
+        return self.dim
+
+
+def qr_embedding(
+    num_categories: int,
+    dim: int,
+    num_collisions: int = 4,
+    op: str = "mult",
+    param_dtype: jnp.dtype = jnp.float32,
+) -> CompositionalEmbedding:
+    """Quotient–remainder trick (paper Alg. 2) with the paper's knob.
+
+    ``num_collisions`` c enforces ~c categories per remainder bucket, i.e.
+    remainder table of ``m = ceil(|S|/c)`` rows and quotient table of ``c``
+    rows — an ~c× parameter reduction (paper §5.3 "4 hash collisions").
+    """
+    m = max(1, -(-num_categories // max(1, num_collisions)))
+    return CompositionalEmbedding(
+        num_categories=num_categories,
+        dim=dim,
+        partitions=tuple(qr_partitions(num_categories, m)),
+        op=op,
+        param_dtype=param_dtype,
+    )
+
+
+def bag_pool(module, params, idx, mask=None):
+    """Sum-pooled multi-hot lookup: ``sum_l emb(idx[..., l]) * mask[..., l]``.
+
+    ``idx``: int array ``(..., L)``; ``mask``: optional ``(..., L)`` (1 keeps
+    the row).  Returns ``(..., dim)``.  This is the contract the fused
+    Pallas ``embedding_bag`` kernel implements.
+    """
+    emb = module.apply(params, idx)  # (..., L, D)
+    if mask is not None:
+        emb = emb * mask[..., None].astype(emb.dtype)
+    return emb.sum(axis=-2)

@@ -1,0 +1,166 @@
+"""Complementary partitions of a category set (paper §3).
+
+A partition of ``S = {0, ..., size-1}`` is represented by a bucketing
+function ``idx -> bucket`` with ``num_buckets`` buckets; equivalence classes
+are the preimages of buckets.  A family ``P_1..P_k`` is *complementary*
+(Definition 1) iff the code tuple ``x -> (p_1(x), ..., p_k(x))`` is
+injective on S — i.e. any two distinct categories land in different buckets
+under at least one partition.
+
+All ``bucket`` implementations are pure jnp and safe to call under jit with
+traced index arrays (they are also fine with plain numpy ints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import reduce
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Partition",
+    "RemainderPartition",
+    "QuotientPartition",
+    "GeneralizedQRPartition",
+    "ExplicitPartition",
+    "naive_partition",
+    "qr_partitions",
+    "generalized_qr_partitions",
+    "crt_partitions",
+    "is_complementary",
+    "codes_for",
+    "min_collision_free_m",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Base class: a partition of {0..size-1} into ``num_buckets`` buckets."""
+
+    size: int
+    num_buckets: int
+
+    def bucket(self, idx):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class RemainderPartition(Partition):
+    """``p(x) = x mod m`` (paper §3.1 ex. 2, the 'hashing trick' partition)."""
+
+    m: int = 1
+
+    def bucket(self, idx):
+        return jnp.asarray(idx) % self.m
+
+
+@dataclasses.dataclass(frozen=True)
+class QuotientPartition(Partition):
+    """``p(x) = x \\ m`` (integer division; paper §3.1 ex. 2)."""
+
+    m: int = 1
+
+    def bucket(self, idx):
+        return jnp.asarray(idx) // self.m
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneralizedQRPartition(Partition):
+    """``p(x) = (x \\ M_j) mod m_j`` — mixed-radix digit (paper §3.1 ex. 3)."""
+
+    divisor: int = 1  # M_j = prod_{i<j} m_i
+    modulus: int = 1  # m_j
+
+    def bucket(self, idx):
+        return (jnp.asarray(idx) // self.divisor) % self.modulus
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplicitPartition(Partition):
+    """Partition given by an explicit bucket table (e.g. car make/year).
+
+    ``table[i]`` is the bucket of category ``i``.  Covers the paper's
+    "inherent characteristics" partitions; the table lives on host as numpy
+    and is closed over as a constant under jit.
+    """
+
+    table: np.ndarray = None  # type: ignore[assignment]
+
+    def bucket(self, idx):
+        return jnp.asarray(self.table)[jnp.asarray(idx)]
+
+
+def naive_partition(size: int) -> list[Partition]:
+    """Singleton partition — full embedding table (paper §3.1 ex. 1)."""
+    return [GeneralizedQRPartition(size=size, num_buckets=size, divisor=1, modulus=size)]
+
+
+def qr_partitions(size: int, m: int) -> list[Partition]:
+    """Quotient–remainder pair (paper §2 / §3.1 ex. 2).
+
+    ``m`` is the remainder-table size (the paper's "number of hash
+    collisions" per row is ~size/m ... actually collisions = size/m for the
+    remainder table alone; QR keeps uniqueness via the quotient table of
+    ``ceil(size/m)`` rows).
+    """
+    if not (1 <= m <= size):
+        raise ValueError(f"m={m} must be in [1, size={size}]")
+    q = math.ceil(size / m)
+    return [
+        RemainderPartition(size=size, num_buckets=m, m=m),
+        QuotientPartition(size=size, num_buckets=q, m=m),
+    ]
+
+
+def generalized_qr_partitions(size: int, ms: Sequence[int]) -> list[Partition]:
+    """Mixed-radix decomposition into k digits (paper §3.1 ex. 3)."""
+    ms = list(ms)
+    if reduce(lambda a, b: a * b, ms, 1) < size:
+        raise ValueError(f"prod({ms}) < size={size}: partitions not complementary")
+    parts: list[Partition] = []
+    divisor = 1
+    for m in ms:
+        parts.append(
+            GeneralizedQRPartition(size=size, num_buckets=m, divisor=divisor, modulus=m)
+        )
+        divisor *= m
+    return parts
+
+
+def crt_partitions(size: int, ms: Sequence[int]) -> list[Partition]:
+    """Chinese-remainder partitions (paper §3.1 ex. 4): pairwise-coprime moduli."""
+    ms = list(ms)
+    for i in range(len(ms)):
+        for j in range(i + 1, len(ms)):
+            if math.gcd(ms[i], ms[j]) != 1:
+                raise ValueError(f"moduli {ms[i]} and {ms[j]} are not coprime")
+    if reduce(lambda a, b: a * b, ms, 1) < size:
+        raise ValueError(f"prod({ms}) < size={size}: CRT map not injective on S")
+    return [RemainderPartition(size=size, num_buckets=m, m=m) for m in ms]
+
+
+def codes_for(partitions: Sequence[Partition], idx) -> jnp.ndarray:
+    """Stack of bucket codes, shape ``idx.shape + (k,)``."""
+    return jnp.stack([p.bucket(idx) for p in partitions], axis=-1)
+
+
+def is_complementary(partitions: Sequence[Partition], size: int | None = None) -> bool:
+    """Brute-force Definition 1 check: code tuples injective on {0..size-1}.
+
+    Intended for tests and config validation on modest ``size``; the
+    constructors above are complementary by theorem (proofs in the paper's
+    appendix), this verifies arbitrary/explicit families.
+    """
+    size = size if size is not None else partitions[0].size
+    idx = np.arange(size)
+    codes = np.stack([np.asarray(p.bucket(idx)) for p in partitions], axis=-1)
+    return len(np.unique(codes, axis=0)) == size
+
+
+def min_collision_free_m(size: int) -> int:
+    """The m minimising total QR rows m + ceil(size/m): m* = ceil(sqrt(size))."""
+    return max(1, math.isqrt(size - 1) + 1) if size > 1 else 1

@@ -1,0 +1,85 @@
+"""Path-based compositional embeddings (paper §4.1, eq. 7).
+
+The first partition indexes a base embedding table; every further partition
+selects a *transformation* (here a 1-hidden-layer MLP, matching the paper's
+§5.5 experiments) from a per-bucket parameter bank, and the embedding is the
+composition ``M_{k,p_k(x)} ∘ ... ∘ M_{2,p_2(x)} (W e_{p_1(x)})``.
+
+Per-bucket MLP parameters are stored stacked ``(num_buckets, ...)`` and
+gathered by bucket index, so the whole lookup stays a fixed-shape gather +
+einsum program (pjit/scan friendly; no per-example python control flow).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .partitions import Partition
+
+__all__ = ["PathBasedEmbedding"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PathBasedEmbedding:
+    num_categories: int
+    dim: int
+    partitions: tuple[Partition, ...] = ()
+    hidden: int = 64  # paper sweeps {16, 32, 64, 128}; 64 is their best
+    param_dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if len(self.partitions) < 2:
+            raise ValueError("path-based embeddings need >= 2 partitions")
+
+    def init(self, key):
+        k0, *keys = jax.random.split(key, 2 * len(self.partitions))
+        scale = (1.0 / self.num_categories) ** 0.5
+        params = {
+            "table": jax.random.uniform(
+                k0, (self.partitions[0].num_buckets, self.dim),
+                minval=-scale, maxval=scale, dtype=self.param_dtype,
+            )
+        }
+        d, h = self.dim, self.hidden
+        for j, part in enumerate(self.partitions[1:], start=1):
+            ka, kb = keys[2 * j - 2], keys[2 * j - 1]
+            n = part.num_buckets
+            # LeCun-uniform per slice; biases zero.
+            params[f"mlp_{j}"] = {
+                "w1": jax.random.uniform(ka, (n, d, h), minval=-(1 / d) ** 0.5,
+                                         maxval=(1 / d) ** 0.5, dtype=self.param_dtype),
+                "b1": jnp.zeros((n, h), self.param_dtype),
+                "w2": jax.random.uniform(kb, (n, h, d), minval=-(1 / h) ** 0.5,
+                                         maxval=(1 / h) ** 0.5, dtype=self.param_dtype),
+                "b2": jnp.zeros((n, d), self.param_dtype),
+            }
+        return params
+
+    def apply(self, params, idx):
+        idx = jnp.asarray(idx)
+        h = jnp.take(params["table"], self.partitions[0].bucket(idx), axis=0)
+        for j, part in enumerate(self.partitions[1:], start=1):
+            b = part.bucket(idx)
+            mlp = params[f"mlp_{j}"]
+            w1 = jnp.take(mlp["w1"], b, axis=0)  # (..., D, H)
+            b1 = jnp.take(mlp["b1"], b, axis=0)
+            w2 = jnp.take(mlp["w2"], b, axis=0)  # (..., H, D)
+            b2 = jnp.take(mlp["b2"], b, axis=0)
+            h = jax.nn.relu(jnp.einsum("...d,...dh->...h", h, w1) + b1)
+            h = jnp.einsum("...h,...hd->...d", h, w2) + b2
+        return h
+
+    @property
+    def num_params(self) -> int:
+        n = self.partitions[0].num_buckets * self.dim
+        d, h = self.dim, self.hidden
+        for part in self.partitions[1:]:
+            n += part.num_buckets * (d * h + h + h * d + d)
+        return n
+
+    @property
+    def out_dim(self) -> int:
+        return self.dim

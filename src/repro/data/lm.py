@@ -1,0 +1,49 @@
+"""Synthetic LM token stream: seeded, stateless-per-step, learnable.
+
+Sequences follow a planted order-1 Markov chain with a low-rank transition
+structure, so a real LM reduces loss well below uniform entropy — enough
+to exercise the full training path (and the QR-compressed vocab embedding)
+without a corpus.  ``batch_at(seed, step, ...)`` is pure: restart-safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["batch_at", "frames_at", "patches_at"]
+
+
+def batch_at(seed: int, step: int, batch_size: int, seq_len: int, vocab: int,
+             rank: int = 8):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k0, kseq = jax.random.split(key)
+    # low-rank markov logits: T[v] ~ U[v] @ V  (planted, seed-stable)
+    ku, kv = jax.random.split(jax.random.PRNGKey(seed ^ 0x5EED))
+    u = jax.random.normal(ku, (vocab, rank))
+    v = jax.random.normal(kv, (rank, vocab))
+    start = jax.random.randint(k0, (batch_size,), 0, vocab)
+
+    def step_fn(tok, k):
+        logits = u[tok] @ v * 2.0
+        nxt = jax.random.categorical(k, logits)
+        return nxt, nxt
+
+    keys = jax.random.split(kseq, seq_len)
+    _, toks = jax.lax.scan(lambda c, k: step_fn(c, k), start, keys)
+    tokens = jnp.concatenate([start[:, None], toks.T], axis=1)  # (B, S+1)
+    return {"tokens": tokens[:, :-1].astype(jnp.int32),
+            "labels": tokens[:, 1:].astype(jnp.int32),
+            "mask": jnp.ones((batch_size, seq_len), jnp.float32)}
+
+
+def frames_at(seed: int, step: int, batch_size: int, n_frames: int, d_model: int):
+    """Stub audio-frame embeddings for the seamless frontend."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xA0D10), step)
+    return jax.random.normal(key, (batch_size, n_frames, d_model)) * 0.1
+
+
+def patches_at(seed: int, step: int, batch_size: int, n_patches: int, d_model: int):
+    """Stub anyres patch embeddings for the llava frontend."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x1A6E), step)
+    return jax.random.normal(key, (batch_size, n_patches, d_model)) * 0.1

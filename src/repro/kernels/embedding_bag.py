@@ -1,0 +1,76 @@
+"""Fused QR embedding-bag kernel (Pallas TPU): gather + combine + sum-pool.
+
+Multi-hot categorical features (bags of L category ids per example) are
+pooled by summation in DLRM-style models.  Unfused, that is ``2·B·L`` row
+gathers, a ``(B, L, D)`` intermediate, and a reduction — ``3·B·L·D`` HBM
+traffic.  This kernel keeps the ``(1, D)`` accumulator resident in VMEM
+across the ``L`` inner grid steps and only writes the pooled ``(B, D)``
+result, so HBM traffic drops to ``2·B·L·D`` reads + ``B·D`` writes (the
+paper-relevant bandwidth saving: pooling is free).
+
+Grid is ``(B, L)`` with the bag dimension innermost; the output BlockSpec
+maps every ``(b, ·)`` step to the same row so the revisited block stays in
+VMEM (Pallas only flushes it when ``b`` changes).  Masked entries multiply
+by 0 rather than branching, keeping the pipeline dense.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["qr_embedding_bag"]
+
+
+def _kernel(rem_idx_ref, quo_idx_ref, mask_ref, wrem_ref, wquo_ref, out_ref, *, op):
+    del rem_idx_ref, quo_idx_ref
+    l = pl.program_id(1)
+    w = mask_ref[0, l].astype(wrem_ref.dtype)
+    if op == "mult":
+        contrib = wrem_ref[0, :] * wquo_ref[0, :] * w
+    else:  # add
+        contrib = (wrem_ref[0, :] + wquo_ref[0, :]) * w
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[0, :] = contrib
+
+    @pl.when(l > 0)
+    def _acc():
+        out_ref[0, :] = out_ref[0, :] + contrib
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def qr_embedding_bag(rem_idx, quo_idx, mask, w_rem, w_quo, *, op: str = "mult",
+                     interpret: bool = True):
+    """``out[b] = sum_l mask[b,l] * (w_rem[rem_idx[b,l]] op w_quo[quo_idx[b,l]])``.
+
+    Args:
+      rem_idx, quo_idx: int32 ``(B, L)``.  mask: ``(B, L)`` (0/1 or weights).
+      w_rem: ``(m, D)``; w_quo: ``(q, D)``.
+    Returns: ``(B, D)`` pooled embeddings.
+    """
+    b, l = rem_idx.shape
+    d = w_rem.shape[1]
+    flat_rem = rem_idx.reshape(-1).astype(jnp.int32)
+    flat_quo = quo_idx.reshape(-1).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, l),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i, j, rem, quo: (i, 0)),      # mask row
+            pl.BlockSpec((1, d), lambda i, j, rem, quo: (rem[i * l + j], 0)),
+            pl.BlockSpec((1, d), lambda i, j, rem, quo: (quo[i * l + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, rem, quo: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), w_rem.dtype),
+        interpret=interpret,
+    )(flat_rem, flat_quo, mask.astype(w_rem.dtype), w_rem, w_quo)

@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are what models call.  Responsibilities:
+  * compute quotient/remainder bucket indices (cheap vector ops XLA fuses);
+  * choose execution path: real Pallas on TPU, ``interpret=True`` elsewhere
+    (this container is CPU-only — interpret mode runs the kernel body in
+    Python and is the validation target), or the jnp reference for configs
+    the kernels don't cover (op="concat", k>2 partitions);
+  * handle padding so callers never see blocking constraints.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dot_interaction import dot_interaction as _dot_kernel
+from .embedding_bag import qr_embedding_bag as _bag_kernel
+from .qr_gather import qr_gather as _gather_kernel
+
+__all__ = ["on_tpu", "qr_lookup", "qr_bag_lookup", "dlrm_interact"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _split_idx(idx, m):
+    idx = jnp.asarray(idx, jnp.int32)
+    return idx % m, idx // m
+
+
+def qr_lookup(idx, w_rem, w_quo, *, op: str = "mult", use_kernel: bool = True,
+              interpret: bool | None = None):
+    """QR-trick embedding lookup for arbitrary-rank ``idx``."""
+    m = w_rem.shape[0]
+    rem, quo = _split_idx(idx, m)
+    if not use_kernel or op == "concat":
+        out = ref.qr_gather_ref(rem, quo, w_rem, w_quo, op=op) if op != "concat" \
+            else jnp.concatenate([jnp.take(w_rem, rem, axis=0),
+                                  jnp.take(w_quo, quo, axis=0)], axis=-1)
+        return out
+    interpret = (not on_tpu()) if interpret is None else interpret
+    shape = rem.shape
+    out = _gather_kernel(rem.reshape(-1), quo.reshape(-1), w_rem, w_quo,
+                         op=op, interpret=interpret)
+    return out.reshape(*shape, w_rem.shape[1])
+
+
+def qr_bag_lookup(idx, mask, w_rem, w_quo, *, op: str = "mult",
+                  use_kernel: bool = True, interpret: bool | None = None):
+    """Sum-pooled multi-hot QR lookup: idx/mask ``(B, L)`` -> ``(B, D)``."""
+    m = w_rem.shape[0]
+    rem, quo = _split_idx(idx, m)
+    if not use_kernel or op == "concat":
+        if op == "concat":
+            rows = jnp.concatenate([jnp.take(w_rem, rem, axis=0),
+                                    jnp.take(w_quo, quo, axis=0)], axis=-1)
+            return (rows * mask[..., None].astype(rows.dtype)).sum(axis=1)
+        return ref.qr_embedding_bag_ref(rem, quo, mask, w_rem, w_quo, op=op)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _bag_kernel(rem, quo, mask, w_rem, w_quo, op=op, interpret=interpret)
+
+
+def dlrm_interact(x, *, use_kernel: bool = True, interpret: bool | None = None,
+                  block_b: int = 8):
+    """DLRM pairwise-dot interaction, padding batch to the kernel block."""
+    if not use_kernel:
+        return ref.dot_interaction_ref(x)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    b = x.shape[0]
+    pad = (-b) % block_b
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    out = _dot_kernel(x, block_b=block_b, interpret=interpret)
+    return out[:b]

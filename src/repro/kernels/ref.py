@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests/benches)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["qr_gather_ref", "qr_embedding_bag_ref", "dot_interaction_ref"]
+
+
+def qr_gather_ref(rem_idx, quo_idx, w_rem, w_quo, *, op: str = "mult"):
+    a = jnp.take(w_rem, rem_idx, axis=0)
+    b = jnp.take(w_quo, quo_idx, axis=0)
+    return a * b if op == "mult" else a + b
+
+
+def qr_embedding_bag_ref(rem_idx, quo_idx, mask, w_rem, w_quo, *, op: str = "mult"):
+    rows = qr_gather_ref(rem_idx, quo_idx, w_rem, w_quo, op=op)  # (B, L, D)
+    return (rows * mask[..., None].astype(rows.dtype)).sum(axis=1)
+
+
+def dot_interaction_ref(x):
+    scores = jnp.einsum("bfd,bgd->bfg", x, x)
+    i, j = np.tril_indices(x.shape[1], k=-1)
+    return scores[:, i, j].astype(x.dtype)

@@ -1,0 +1,1 @@
+"""Launch: mesh, dryrun, train, serve CLIs."""

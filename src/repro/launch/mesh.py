@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (smoke tests must keep seeing 1 CPU device; only
+``dryrun.py`` forces 512 host devices via XLA_FLAGS before any jax import).
+
+Production target: TPU v5e pods, 256 chips each.
+  single pod : (data=16, model=16)
+  multi-pod  : (pod=2, data=16, model=16)  — 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+# Hardware constants used by the roofline analysis (TPU v5e).
+HW = {
+    "peak_bf16_flops": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link
+    "hbm_per_chip": 16 * 1024 ** 3,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests with forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,67 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Boots a reduced-config model and drives the wave-batched engine with a
+synthetic request stream (prompt lengths bucketed, greedy/temperature
+sampling).  The decode step it runs is exactly what decode_32k lowers in
+the dry-run.
+"""
+
+import argparse
+import time
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from ..configs import get_arch
+    from ..serve.engine import ServeEngine
+
+    mod = get_arch(args.arch)
+    cfg = mod.config(reduced=True)
+    api = mod.api(cfg)
+    if api.prefill is None or api.decode is None:
+        raise SystemExit(f"{args.arch} has no serving path")
+    params = api.init(jax.random.PRNGKey(0))
+
+    n_extra = len(api.prefill_inputs(
+        __import__("repro.configs.common", fromlist=["Shape"]).Shape("x", 8, 1, "prefill"))) - 1
+
+    def prefill_fn(tokens, cache):
+        if n_extra:  # multimodal stubs: zero frames/patches
+            import jax.numpy as jnp
+            from ..configs.common import Shape
+            structs = api.prefill_inputs(Shape("x", tokens.shape[1], tokens.shape[0], "prefill"))
+            extra = tuple(jnp.zeros(s.shape, s.dtype) for s in structs[:-1])
+            return api.prefill(params, *extra, tokens, cache)
+        return api.prefill(params, tokens, cache)
+
+    engine = ServeEngine(
+        prefill_fn=prefill_fn,
+        decode_fn=lambda tok, pos, cache: api.decode(params, tok, pos, cache),
+        make_cache_fn=api.make_cache,
+        batch_size=args.batch_size, max_len=args.max_len,
+        temperature=args.temperature)
+
+    for i in range(args.requests):
+        plen = 4 if i % 3 else 7
+        engine.submit(list(range(1, plen + 1)), max_new_tokens=args.max_new_tokens)
+    t0 = time.monotonic()
+    done = engine.run_until_drained()
+    dt = time.monotonic() - t0
+    toks = sum(len(r.output) for r in done.values())
+    print(f"{args.arch}: served {len(done)} requests / {toks} tokens in {dt:.2f}s")
+    for uid in sorted(done)[:3]:
+        print(f"  req {uid}: {done[uid].output}")
+
+
+if __name__ == "__main__":
+    main()

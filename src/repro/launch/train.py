@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced configs end-to-end (the same code
+path the production mesh lowers — pjit step, sharded loader, async
+checkpoints, restart-safe).  On a real cluster the only changes are
+``--mesh`` and full-scale ``--no-reduced``.
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dlrm-criteo")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--embedding", default="qr")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args()
+
+    from ..configs import get_arch
+    from ..configs.common import Shape
+    from ..train.loop import TrainConfig, Trainer, init_state, make_train_step
+
+    mod = get_arch(args.arch)
+    cfg = mod.config(reduced=args.reduced, embedding=args.embedding)
+    api = mod.api(cfg)
+    shape = Shape("cli", args.seq_len, args.batch, "train")
+
+    params = api.init(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"{args.arch}: {n:,} parameters (embedding={args.embedding})")
+
+    state = init_state(params, api.optimizer)
+    tc = TrainConfig(num_steps=args.steps, log_every=args.log_every,
+                     ckpt_every=max(50, args.steps // 4), ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(make_train_step(api.loss_fn, api.optimizer), tc,
+                      batch_at=lambda s: api.batch_fn(s, shape))
+    state = trainer.resume_or(state)
+    state, history = trainer.run(state)
+    for step, loss in history:
+        print(f"step {step:5d}  loss {loss:.4f}")
+    if trainer.straggler_events:
+        print("straggler events:", trainer.straggler_events)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Facebook DLRM (Naumov et al. 2019) — the paper's primary test network.
+
+Bottom MLP over 13 dense features → pairwise dot interaction with the 26
+categorical embeddings → top MLP → CTR logit.  Every embedding table is
+built through ``repro.core.make_embedding``, so ``EmbeddingSpec`` switches
+the whole model between full / hashing-trick / quotient-remainder /
+mixed-radix / CRT / path-based embeddings and the feature-generation mode —
+exactly the treatments compared in the paper's §5.
+
+In ``feature`` mode each complementary partition contributes its own
+feature vector to the interaction (paper §4 "feature generation approach"),
+growing F instead of combining embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import CompositionalEmbedding, EmbeddingSpec, make_embedding
+from ..kernels import dlrm_interact, ops
+
+__all__ = ["DLRMConfig", "dlrm_init", "dlrm_forward", "dlrm_loss_fn",
+           "dlrm_num_params", "tables_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    dense_dim: int = 13
+    table_sizes: tuple[int, ...] = ()
+    emb_dim: int = 16
+    bottom_mlp: tuple[int, ...] = (512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 256)
+    embedding: EmbeddingSpec = EmbeddingSpec()
+    use_kernel: bool = False     # route interaction through the Pallas kernel
+    param_dtype: Any = "float32"
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+def tables_for(cfg) -> list:
+    """Embedding module per categorical feature (threshold rule applies)."""
+    return [make_embedding(n, cfg.emb_dim, cfg.embedding, cfg.pdtype)
+            for n in cfg.table_sizes]
+
+
+def _feature_mode(cfg) -> bool:
+    return cfg.embedding.kind == "feature"
+
+
+def _mlp_init(key, dims, param_dtype):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (i, o), param_dtype) * (2.0 / i) ** 0.5,
+             "b": jnp.zeros((o,), param_dtype)}
+            for k, i, o in zip(keys, dims[:-1], dims[1:])]
+
+
+def _mlp_apply(layers, x, final_linear=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if not (final_linear and i == len(layers) - 1):
+            x = jax.nn.relu(x)
+    return x
+
+
+def _num_features(cfg, modules) -> int:
+    f = 1  # bottom-MLP output participates in the interaction
+    for mod in modules:
+        if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):
+            f += len(mod.partitions)
+        else:
+            f += 1
+    return f
+
+
+def dlrm_init(key, cfg: DLRMConfig):
+    modules = tables_for(cfg)
+    kb, kt, ke = jax.random.split(key, 3)
+    ekeys = jax.random.split(ke, len(modules))
+    f = _num_features(cfg, modules)
+    interact_dim = f * (f - 1) // 2 + cfg.emb_dim
+    return {
+        "bottom": _mlp_init(kb, (cfg.dense_dim,) + cfg.bottom_mlp + (cfg.emb_dim,),
+                            cfg.pdtype),
+        "top": _mlp_init(kt, (interact_dim,) + cfg.top_mlp + (1,), cfg.pdtype),
+        "tables": [m.init(k) for m, k in zip(modules, ekeys)],
+    }
+
+
+def dlrm_forward(params, dense_x, sparse_idx, cfg: DLRMConfig):
+    """dense_x: (B, 13) float; sparse_idx: (B, 26) int32 → logits (B,)."""
+    modules = tables_for(cfg)
+    z = _mlp_apply(params["bottom"], dense_x.astype(cfg.pdtype))  # (B, D)
+    feats = [z]
+    for i, mod in enumerate(modules):
+        idx = sparse_idx[:, i]
+        tp = params["tables"][i]
+        if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):
+            feats.extend(mod.partition_embeddings(tp, idx))
+        elif cfg.use_kernel and isinstance(mod, CompositionalEmbedding) \
+                and len(mod.partitions) == 2 and mod.op in ("mult", "add"):
+            m = mod.partitions[0].num_buckets
+            feats.append(ops.qr_lookup(idx, tp["table_0"], tp["table_1"], op=mod.op))
+        else:
+            feats.append(mod.apply(tp, idx))
+    x = jnp.stack(feats, axis=1)  # (B, F, D)
+    inter = dlrm_interact(x) if cfg.use_kernel else _interact_ref(x)
+    top_in = jnp.concatenate([z, inter], axis=-1)
+    return _mlp_apply(params["top"], top_in, final_linear=True)[:, 0]
+
+
+def _interact_ref(x):
+    import numpy as np
+    scores = jnp.einsum("bfd,bgd->bfg", x, x)
+    i, j = np.tril_indices(x.shape[1], k=-1)
+    return scores[:, i, j]
+
+
+def dlrm_loss_fn(params, batch, cfg: DLRMConfig):
+    """batch: dense (B,13), sparse (B,26) int32, label (B,) in {0,1}."""
+    logits = dlrm_forward(params, batch["dense"], batch["sparse"], cfg)
+    y = batch["label"].astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"bce": loss, "acc": acc}
+
+
+def dlrm_num_params(cfg: DLRMConfig) -> int:
+    modules = tables_for(cfg)
+    n = sum(m.num_params for m in modules)
+    dims_b = (cfg.dense_dim,) + cfg.bottom_mlp + (cfg.emb_dim,)
+    f = _num_features(cfg, modules)
+    dims_t = (f * (f - 1) // 2 + cfg.emb_dim,) + cfg.top_mlp + (1,)
+    for d in (dims_b, dims_t):
+        n += sum(i * o + o for i, o in zip(d[:-1], d[1:]))
+    return n

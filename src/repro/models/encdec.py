@@ -1,0 +1,204 @@
+"""Encoder–decoder backbone for seamless-m4t-large-v2 (audio → text).
+
+The speech frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings ``(B, S_enc, d_model)`` (a real deployment
+would put the conformer feature extractor there).  The backbone — a
+full-attention encoder and a causal decoder with cross-attention — is real
+and carries the 256k-row text vocabulary, the most embedding-dominated
+table of all assigned archs (the paper's QR trick applies to it through
+``cfg.embedding``).
+
+Decode caches both the decoder self-attention KV *and* per-layer
+cross-attention K/V computed once from encoder memory at prefill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import EmbeddingSpec, make_embedding
+from ..dist.sharding import constrain_batch
+from ..nn.layers import (AttnConfig, attention, attention_init,
+                         attention_with_kv, cross_kv, dense, dense_init,
+                         make_cache, mlp, mlp_init, rmsnorm, rmsnorm_init)
+from .lm import chunked_xent
+
+__all__ = ["EncDecConfig", "encdec_init", "encdec_loss_fn", "encode",
+           "encdec_make_cache", "encdec_prefill", "encdec_decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str = "seamless"
+    vocab: int = 256206
+    d_model: int = 1024
+    enc_layers: int = 24
+    dec_layers: int = 24
+    n_heads: int = 16
+    n_kv_heads: int = 16
+    d_head: int = 64
+    d_ff: int = 8192
+    ffn_kind: str = "gelu"
+    rope_theta: float = 1e4
+    enc_ratio: int = 4           # S_enc = seq_len // enc_ratio
+    embedding: EmbeddingSpec = EmbeddingSpec()
+    param_dtype: Any = "bfloat16"
+    compute_dtype: Any = "bfloat16"
+    xent_chunk: int = 512
+    remat: bool = True
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def attn_cfg(self, causal: bool) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+                          rope_theta=self.rope_theta, causal=causal)
+
+
+def _enc_layer_init(key, cfg):
+    ka, km = jax.random.split(key)
+    return {"norm1": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "attn": attention_init(ka, cfg.attn_cfg(False), cfg.pdtype),
+            "norm2": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, cfg.pdtype, cfg.ffn_kind)}
+
+
+def _dec_layer_init(key, cfg):
+    ka, kx, km = jax.random.split(key, 3)
+    return {"norm1": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "self_attn": attention_init(ka, cfg.attn_cfg(True), cfg.pdtype),
+            "norm_x": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "cross_attn": attention_init(kx, cfg.attn_cfg(False), cfg.pdtype),
+            "norm2": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, cfg.pdtype, cfg.ffn_kind)}
+
+
+def encdec_init(key, cfg: EncDecConfig):
+    ke, kf, kenc, kdec, kh = jax.random.split(key, 5)
+    embed = make_embedding(cfg.vocab, cfg.d_model, cfg.embedding, cfg.pdtype)
+    enc = jax.vmap(lambda k: _enc_layer_init(k, cfg))(jax.random.split(kenc, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _dec_layer_init(k, cfg))(jax.random.split(kdec, cfg.dec_layers))
+    return {"embed": embed.init(ke),
+            "frontend_proj": dense_init(kf, cfg.d_model, cfg.d_model, cfg.pdtype),
+            "encoder": enc, "enc_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "decoder": dec, "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "lm_head": dense_init(kh, cfg.d_model, cfg.vocab, cfg.pdtype)}
+
+
+def encode(params, frames, cfg: EncDecConfig):
+    """frames: (B, S_enc, d_model) stub embeddings → encoder memory."""
+    h = constrain_batch(dense(params["frontend_proj"], frames.astype(cfg.cdtype), cfg.cdtype))
+    acfg = cfg.attn_cfg(False)
+
+    def body(carry, lp):
+        h = carry + attention(lp["attn"], rmsnorm(lp["norm1"], carry), acfg, cfg.cdtype)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["norm2"], h), cfg.cdtype, cfg.ffn_kind)
+        return constrain_batch(h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = lax.scan(body, h, params["encoder"])
+    return rmsnorm(params["enc_norm"], h)
+
+
+def _decode_stack(params, h, memory, cfg: EncDecConfig):
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+
+    def body(carry, lp):
+        h = carry + attention(lp["self_attn"], rmsnorm(lp["norm1"], carry),
+                              self_cfg, cfg.cdtype)
+        h = h + attention(lp["cross_attn"], rmsnorm(lp["norm_x"], h), cross_cfg,
+                          cfg.cdtype, kv_x=memory)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["norm2"], h), cfg.cdtype, cfg.ffn_kind)
+        return constrain_batch(h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = lax.scan(body, h, params["decoder"])
+    return rmsnorm(params["final_norm"], h)
+
+
+def _embed(params, tokens, cfg):
+    embed = make_embedding(cfg.vocab, cfg.d_model, cfg.embedding, cfg.pdtype)
+    return constrain_batch(embed.apply(params["embed"], tokens).astype(cfg.cdtype))
+
+
+def encdec_loss_fn(params, batch, cfg: EncDecConfig):
+    """batch: frames (B,Se,D), tokens (B,S), labels (B,S), mask (B,S)."""
+    memory = encode(params, batch["frames"], cfg)
+    h = _decode_stack(params, _embed(params, batch["tokens"], cfg), memory, cfg)
+    loss = chunked_xent(h, batch["labels"], batch["mask"],
+                        params["lm_head"]["w"], cfg.xent_chunk)
+    return loss, {"xent": loss}
+
+
+# ------------------------------------------------------------------ serving
+
+
+def encdec_make_cache(cfg: EncDecConfig, batch: int, max_len: int):
+    kv = make_cache(batch, max_len, cfg.n_kv_heads, cfg.d_head, cfg.cdtype)
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.dec_layers,) + x.shape), kv)
+    s_enc = max(1, max_len // cfg.enc_ratio)
+    cross = jnp.zeros((cfg.dec_layers, batch, s_enc, cfg.n_kv_heads, cfg.d_head),
+                      cfg.cdtype)
+    return {"self": kv, "cross_k": cross, "cross_v": cross}
+
+
+def encdec_prefill(params, frames, tokens, cache, cfg: EncDecConfig):
+    """Encode audio, precompute cross K/V, prefill decoder self-attn cache."""
+    memory = encode(params, frames, cfg)
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+    h = _embed(params, tokens, cfg)
+
+    def body(carry, xs):
+        lp, self_cache = xs
+        ck, cv = cross_kv(lp["cross_attn"], memory, cross_cfg, cfg.cdtype)
+        h = carry
+        attn_out, new_self = attention(lp["self_attn"], rmsnorm(lp["norm1"], h),
+                                       self_cfg, cfg.cdtype, cache=self_cache)
+        h = h + attn_out
+        h = h + attention_with_kv(lp["cross_attn"], rmsnorm(lp["norm_x"], h),
+                                  ck, cv, cross_cfg, cfg.cdtype)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["norm2"], h), cfg.cdtype, cfg.ffn_kind)
+        return h, (new_self, ck, cv)
+
+    h, (new_self, cks, cvs) = lax.scan(body, h, (params["decoder"], cache["self"]))
+    h = rmsnorm(params["final_norm"], h)
+    logits = dense(params["lm_head"], h[:, -1:], cfg.cdtype).astype(jnp.float32)
+    return logits, {"self": new_self, "cross_k": cks, "cross_v": cvs}
+
+
+def encdec_decode_step(params, tokens, pos, cache, cfg: EncDecConfig):
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+    h = _embed(params, tokens, cfg)
+    positions = jnp.full((tokens.shape[0], 1), pos)
+
+    def body(carry, xs):
+        lp, self_cache, ck, cv = xs
+        h = carry
+        attn_out, new_self = attention(lp["self_attn"], rmsnorm(lp["norm1"], h),
+                                       self_cfg, cfg.cdtype, positions=positions,
+                                       cache=self_cache, cache_index=pos)
+        h = h + attn_out
+        h = h + attention_with_kv(lp["cross_attn"], rmsnorm(lp["norm_x"], h),
+                                  ck, cv, cross_cfg, cfg.cdtype)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["norm2"], h), cfg.cdtype, cfg.ffn_kind)
+        return h, new_self
+
+    h, new_self = lax.scan(body, h, (params["decoder"], cache["self"],
+                                     cache["cross_k"], cache["cross_v"]))
+    h = rmsnorm(params["final_norm"], h)
+    logits = dense(params["lm_head"], h, cfg.cdtype).astype(jnp.float32)
+    return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

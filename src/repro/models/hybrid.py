@@ -1,0 +1,285 @@
+"""SSM and hybrid-SSM language models: mamba2-370m and zamba2-1.2b.
+
+``MambaLM`` — a pure Mamba2 stack (attention-free; the only assigned archs
+legal for the long_500k decode shape, since their "KV cache" is an O(1)
+(H, N, P) state + a (d_conv−1) conv window per layer).
+
+``HybridLM`` (Zamba2-style) — Mamba2 backbone with a *shared* transformer
+block (one set of attention+MLP weights) applied every ``block_len`` layers.
+Structure: ``n_blocks`` × [block_len mamba layers → shared attn block] +
+``n_tail`` trailing mamba layers.  The shared block's weights are scan
+closure constants; its per-application KV caches are stacked on the scan
+axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import EmbeddingSpec, make_embedding
+from ..dist.sharding import constrain_batch
+from ..nn.layers import (AttnConfig, attention, attention_init, dense,
+                         dense_init, make_cache, mlp, mlp_init, rmsnorm,
+                         rmsnorm_init)
+from ..nn.ssm import SSMConfig, ssm_apply, ssm_decode, ssm_init, ssm_make_cache
+from .lm import chunked_xent
+
+__all__ = ["MambaLMConfig", "HybridLMConfig", "mamba_init", "mamba_loss_fn",
+           "mamba_make_cache", "mamba_decode_step", "mamba_prefill",
+           "hybrid_init", "hybrid_loss_fn", "hybrid_make_cache",
+           "hybrid_decode_step"]
+
+
+# ====================================================================== MambaLM
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaLMConfig:
+    name: str = "mamba2"
+    vocab: int = 50280
+    d_model: int = 1024
+    n_layers: int = 48
+    ssm: SSMConfig = SSMConfig(d_model=1024, d_state=128)
+    embedding: EmbeddingSpec = EmbeddingSpec()
+    param_dtype: Any = "bfloat16"
+    compute_dtype: Any = "bfloat16"
+    xent_chunk: int = 512
+    remat: bool = True
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _mamba_layer_init(key, cfg):
+    return {"norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "ssm": ssm_init(key, cfg.ssm, cfg.pdtype)}
+
+
+def mamba_init(key, cfg: MambaLMConfig):
+    ke, kl, kh = jax.random.split(key, 3)
+    embed = make_embedding(cfg.vocab, cfg.d_model, cfg.embedding, cfg.pdtype)
+    layers = jax.vmap(lambda k: _mamba_layer_init(k, cfg))(jax.random.split(kl, cfg.n_layers))
+    return {"embed": embed.init(ke), "layers": layers,
+            "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "lm_head": dense_init(kh, cfg.d_model, cfg.vocab, cfg.pdtype)}
+
+
+def _mamba_forward(params, h, cfg: MambaLMConfig):
+    def body(carry, lp):
+        out = carry + ssm_apply(lp["ssm"], rmsnorm(lp["norm"], carry), cfg.ssm, cfg.cdtype)
+        return constrain_batch(out), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = lax.scan(body, h, params["layers"])
+    return rmsnorm(params["final_norm"], h)
+
+
+def _embed(params, tokens, cfg):
+    embed = make_embedding(cfg.vocab, cfg.d_model, cfg.embedding, cfg.pdtype)
+    return constrain_batch(embed.apply(params["embed"], tokens).astype(cfg.cdtype))
+
+
+def mamba_loss_fn(params, batch, cfg: MambaLMConfig):
+    h = _mamba_forward(params, _embed(params, batch["tokens"], cfg), cfg)
+    loss = chunked_xent(h, batch["labels"], batch["mask"],
+                        params["lm_head"]["w"], cfg.xent_chunk)
+    return loss, {"xent": loss}
+
+
+def mamba_make_cache(cfg: MambaLMConfig, batch: int, max_len: int = 0):
+    one = ssm_make_cache(batch, cfg.ssm, cfg.cdtype)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+
+
+def mamba_decode_step(params, tokens, pos, cache, cfg: MambaLMConfig):
+    del pos  # SSM state is position-free
+    h = _embed(params, tokens, cfg)
+
+    def body(carry, xs):
+        lp, cache_l = xs
+        out, new_cache = ssm_decode(lp["ssm"], rmsnorm(lp["norm"], carry),
+                                    cfg.ssm, cfg.cdtype, cache_l)
+        return carry + out, new_cache
+
+    h, new_caches = lax.scan(body, h, (params["layers"], cache))
+    h = rmsnorm(params["final_norm"], h)
+    logits = dense(params["lm_head"], h, cfg.cdtype).astype(jnp.float32)
+    return logits, new_caches
+
+
+def mamba_prefill(params, tokens, cache, cfg: MambaLMConfig):
+    h = _embed(params, tokens, cfg)
+
+    def body(carry, lp):
+        out, st = ssm_apply(lp["ssm"], rmsnorm(lp["norm"], carry), cfg.ssm,
+                            cfg.cdtype, return_state=True)
+        return carry + out, st
+
+    h, new_caches = lax.scan(body, h, params["layers"])
+    h = rmsnorm(params["final_norm"], h)
+    logits = dense(params["lm_head"], h[:, -1:], cfg.cdtype).astype(jnp.float32)
+    return logits, new_caches
+
+
+# ====================================================================== HybridLM
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLMConfig:
+    name: str = "zamba2"
+    vocab: int = 32000
+    d_model: int = 2048
+    n_blocks: int = 6
+    block_len: int = 6
+    n_tail: int = 2          # n_mamba = n_blocks*block_len + n_tail = 38
+    ssm: SSMConfig = SSMConfig(d_model=2048, d_state=64)
+    n_heads: int = 32
+    n_kv_heads: int = 32
+    d_head: int = 64
+    d_ff: int = 8192
+    rope_theta: float = 1e4
+    embedding: EmbeddingSpec = EmbeddingSpec()
+    param_dtype: Any = "bfloat16"
+    compute_dtype: Any = "bfloat16"
+    xent_chunk: int = 512
+    remat: bool = True
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+                          rope_theta=self.rope_theta)
+
+
+def hybrid_init(key, cfg: HybridLMConfig):
+    ke, kb, kt, ks, kh = jax.random.split(key, 5)
+    embed = make_embedding(cfg.vocab, cfg.d_model, cfg.embedding, cfg.pdtype)
+    mcfg = MambaLMConfig(d_model=cfg.d_model, ssm=cfg.ssm,
+                         param_dtype=cfg.param_dtype)
+    bkeys = jax.random.split(kb, cfg.n_blocks * cfg.block_len).reshape(
+        cfg.n_blocks, cfg.block_len, 2)
+    blocks = jax.vmap(jax.vmap(lambda k: _mamba_layer_init(k, mcfg)))(bkeys)
+    tail = jax.vmap(lambda k: _mamba_layer_init(k, mcfg))(jax.random.split(kt, cfg.n_tail))
+    ka, km = jax.random.split(ks)
+    shared = {"norm1": rmsnorm_init(cfg.d_model, cfg.pdtype),
+              "attn": attention_init(ka, cfg.attn_cfg(), cfg.pdtype),
+              "norm2": rmsnorm_init(cfg.d_model, cfg.pdtype),
+              "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, cfg.pdtype)}
+    return {"embed": embed.init(ke), "blocks": blocks, "tail": tail,
+            "shared": shared,
+            "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "lm_head": dense_init(kh, cfg.d_model, cfg.vocab, cfg.pdtype)}
+
+
+def _hybrid_forward(params, h, cfg: HybridLMConfig):
+    shared = params["shared"]
+    acfg = cfg.attn_cfg()
+
+    def mamba_body(carry, lp):
+        out = carry + ssm_apply(lp["ssm"], rmsnorm(lp["norm"], carry),
+                                cfg.ssm, cfg.cdtype)
+        return constrain_batch(out), None
+
+    def block_body(carry, bp):
+        h, _ = lax.scan(mamba_body, carry, bp)
+        h = h + attention(shared["attn"], rmsnorm(shared["norm1"], h), acfg, cfg.cdtype)
+        h = h + mlp(shared["mlp"], rmsnorm(shared["norm2"], h), cfg.cdtype)
+        return h, None
+
+    if cfg.remat:
+        block_body = jax.checkpoint(block_body, prevent_cse=False)
+    h, _ = lax.scan(block_body, h, params["blocks"])
+    h, _ = lax.scan(mamba_body, h, params["tail"])
+    return rmsnorm(params["final_norm"], h)
+
+
+def hybrid_loss_fn(params, batch, cfg: HybridLMConfig):
+    h = _hybrid_forward(params, _embed(params, batch["tokens"], cfg), cfg)
+    loss = chunked_xent(h, batch["labels"], batch["mask"],
+                        params["lm_head"]["w"], cfg.xent_chunk)
+    return loss, {"xent": loss}
+
+
+def hybrid_make_cache(cfg: HybridLMConfig, batch: int, max_len: int):
+    ssm_one = ssm_make_cache(batch, cfg.ssm, cfg.cdtype)
+    blocks = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_blocks, cfg.block_len) + x.shape), ssm_one)
+    tail = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_tail,) + x.shape), ssm_one)
+    kv_one = make_cache(batch, max_len, cfg.n_kv_heads, cfg.d_head, cfg.cdtype)
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_blocks,) + x.shape), kv_one)
+    return {"blocks": blocks, "tail": tail, "kv": kv}
+
+
+def hybrid_prefill(params, tokens, cache, cfg: HybridLMConfig):
+    """Prefill: SSD chunked forward capturing states + attn KV cache fill."""
+    h = _embed(params, tokens, cfg)
+    shared = params["shared"]
+    acfg = cfg.attn_cfg()
+
+    def mamba_pre(carry, lp):
+        out, st = ssm_apply(lp["ssm"], rmsnorm(lp["norm"], carry), cfg.ssm,
+                            cfg.cdtype, return_state=True)
+        return carry + out, st
+
+    def block_step(carry, xs):
+        bp, kv_cache = xs
+        h, states = lax.scan(mamba_pre, carry, bp)
+        attn_out, new_kv = attention(shared["attn"], rmsnorm(shared["norm1"], h),
+                                     acfg, cfg.cdtype, cache=kv_cache)
+        h = h + attn_out
+        h = h + mlp(shared["mlp"], rmsnorm(shared["norm2"], h), cfg.cdtype)
+        return h, (states, new_kv)
+
+    h, (bstates, kvs) = lax.scan(block_step, h, (params["blocks"], cache["kv"]))
+    h, tstates = lax.scan(mamba_pre, h, params["tail"])
+    h = rmsnorm(params["final_norm"], h)
+    logits = dense(params["lm_head"], h[:, -1:], cfg.cdtype).astype(jnp.float32)
+    return logits, {"blocks": bstates, "tail": tstates, "kv": kvs}
+
+
+def hybrid_decode_step(params, tokens, pos, cache, cfg: HybridLMConfig):
+    h = _embed(params, tokens, cfg)
+    shared = params["shared"]
+    acfg = cfg.attn_cfg()
+    positions = jnp.full((tokens.shape[0], 1), pos)
+
+    def mamba_step(carry, xs):
+        lp, cache_l = xs
+        out, new_cache = ssm_decode(lp["ssm"], rmsnorm(lp["norm"], carry),
+                                    cfg.ssm, cfg.cdtype, cache_l)
+        return carry + out, new_cache
+
+    def block_step(carry, xs):
+        bp, bcache, kv_cache = xs
+        h, new_bcache = lax.scan(mamba_step, carry, (bp, bcache))
+        attn_out, new_kv = attention(shared["attn"], rmsnorm(shared["norm1"], h),
+                                     acfg, cfg.cdtype, positions=positions,
+                                     cache=kv_cache, cache_index=pos)
+        h = h + attn_out
+        h = h + mlp(shared["mlp"], rmsnorm(shared["norm2"], h), cfg.cdtype)
+        return h, (new_bcache, new_kv)
+
+    h, (new_blocks, new_kv) = lax.scan(
+        block_step, h, (params["blocks"], cache["blocks"], cache["kv"]))
+    h, new_tail = lax.scan(mamba_step, h, (params["tail"], cache["tail"]))
+    h = rmsnorm(params["final_norm"], h)
+    logits = dense(params["lm_head"], h, cfg.cdtype).astype(jnp.float32)
+    return logits, {"blocks": new_blocks, "tail": new_tail, "kv": new_kv}

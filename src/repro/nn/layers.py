@@ -1,0 +1,401 @@
+"""Shared neural-net layers: functional init/apply, pjit/scan friendly.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays;
+  * ``init_*`` take an explicit PRNG key and shapes; ``apply`` is pure;
+  * weights are stored in ``param_dtype`` and cast to ``compute_dtype`` at
+    use (mixed precision);
+  * attention is memory-linear: a two-level (q-block × kv-block) scan with
+    running-max/denominator ("flash") so 32k-token prefill never
+    materialises an S×S score matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm", "mlp_init", "mlp",
+    "rope", "attention_init", "attention", "make_cache", "AttnConfig",
+    "flash_attention",
+]
+
+
+# ---------------------------------------------------------------- basics
+
+
+def dense_init(key, d_in, d_out, param_dtype, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return {"w": jax.random.normal(key, (d_in, d_out), param_dtype) * scale}
+
+
+def dense(params, x, compute_dtype):
+    return x.astype(compute_dtype) @ params["w"].astype(compute_dtype)
+
+
+def rmsnorm_init(d, param_dtype):
+    return {"g": jnp.ones((d,), param_dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * params["g"].astype(jnp.float32)).astype(dt)
+
+
+def mlp_init(key, d_model, d_ff, param_dtype, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wo": dense_init(k2, d_ff, d_model, param_dtype)}
+    if kind == "swiglu":
+        p["wi"] = dense_init(k1, d_model, d_ff, param_dtype)
+        p["wg"] = dense_init(k3, d_model, d_ff, param_dtype)
+    else:  # gelu / relu
+        p["wi"] = dense_init(k1, d_model, d_ff, param_dtype)
+    return p
+
+
+def mlp(params, x, compute_dtype, kind: str = "swiglu"):
+    """Transformer FFN with Megatron-style activation pinning.
+
+    §Perf iteration 1: without explicit constraints GSPMD resolved the
+    FSDP-sharded weight contraction by resharding *activations* over the
+    data axis (f32 all-gather + all-reduce of the full (B,S,D) hidden per
+    layer — the dominant wire cost in every train cell).  Pinning
+    batch-sharded input → model-sharded FFN hidden → psum output restores
+    the canonical TP/FSDP pattern: weights gather (MBs), activations stay
+    put.
+    """
+    from ..dist.sharding import constrain, constrain_batch
+    x = constrain_batch(x)
+    h = dense(params["wi"], x, compute_dtype)
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x, compute_dtype)) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    if h.ndim == 3:
+        h = constrain(h, "dp", None, "model")
+    return constrain_batch(dense(params["wo"], h, compute_dtype))
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope(x, positions, theta: float = 1e4):
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- flash attention
+
+
+def _attend_block(q, k, v, m, l, acc, mask):
+    """One (q-block, kv-block) flash step.  q: (B,Q,Hk,G,D), k/v: (B,K,Hk,D)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale + mask  # mask: (Q, K) additive, broadcast
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * alpha[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+# Re-pinning batch sharding on flash-bwd residuals was tried as a fix for
+# GSPMD dropping the batch sharding across the custom_vjp boundary; measured
+# effect on the 16x16 mesh was the OPPOSITE (conflicting constraints made
+# GSPMD replicate the score blocks: 4.5x per-chip FLOPs, 7x temp memory on
+# tinyllama train_4k).  Hypothesis refuted — logged in EXPERIMENTS.md §Perf.
+_FLASH_BWD_CONSTRAIN = False
+
+
+def _pad_to_blocks(q, k, v, block_q, block_k):
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    nq, nk = -(-sq // block_q), -(-sk // block_k)
+    pad_q, pad_k = nq * block_q - sq, nk * block_k - sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    return q, k, v, nq, nk
+
+
+def _flash_fwd_impl(q, k, v, causal, q_offset, block_q, block_k, kv_len):
+    b, sq, h, dh = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // hkv
+    block_q, block_k = min(block_q, sq), min(block_k, sk)
+    qp_, kp_, vp_, nq, nk = _pad_to_blocks(q, k, v, block_q, block_k)
+    qg = qp_.reshape(b, nq, block_q, hkv, g, dh)
+    kg = kp_.reshape(b, nk, block_k, hkv, dh)
+    vg = vp_.reshape(b, nk, block_k, hkv, dv)
+    q_pos = q_offset + jnp.arange(nq * block_q).reshape(nq, block_q)
+    k_pos = jnp.arange(nk * block_k).reshape(nk, block_k)
+    valid_k = sk if kv_len is None else kv_len
+
+    def q_step(_, qi):
+        qblk = qg[:, qi]
+        qp = q_pos[qi]
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kp = k_pos[kj]
+            mask = jnp.zeros((block_q, block_k), jnp.float32)
+            if causal:
+                mask = jnp.where(qp[:, None] >= kp[None, :], 0.0, -jnp.inf)
+            mask = jnp.where(kp[None, :] < valid_k, mask, -jnp.inf)
+            return _attend_block(qblk, kg[:, kj], vg[:, kj], m, l, acc, mask), None
+
+        m0 = jnp.full((b, hkv, g, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, block_q, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,Hkv,G,Q,Dv)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.inf)
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)      # (B,Q,Hkv,G,Dv)
+
+    _, (outs, lses) = lax.scan(q_step, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * block_q, h, dv)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, nq * block_q)
+    return out[:, :sq].astype(q.dtype), lse[..., :sq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, q_offset, block_q, block_k):
+    return _flash_fwd_impl(q, k, v, causal, q_offset, block_q, block_k, None)[0]
+
+
+def _flash_fwd(q, k, v, causal, q_offset, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, block_q, block_k, None)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, block_q, block_k, res, dout):
+    """Flash backward: recompute score blocks from (q,k,v,out,lse).
+
+    Residuals are O(S·D) — this is what keeps the 32k-token backward pass
+    memory-linear (the naive scan-autodiff version stored O(S²) score
+    blocks; see EXPERIMENTS.md §Perf).
+    """
+    q, k, v, out, lse = res
+    if _FLASH_BWD_CONSTRAIN:
+        from ..dist.sharding import constrain_batch
+        # re-pin batch sharding on residuals: GSPMD sometimes drops it across
+        # the custom_vjp boundary, replicating the (B,H,G,Sq,K) score blocks.
+        q, k, v, out, dout = map(constrain_batch, (q, k, v, out, dout))
+    b, sq, h, dh = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // hkv
+    scale = dh ** -0.5
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    qp_, kp_, vp_, nq, nk = _pad_to_blocks(q, k, v, bq, bk)
+    spad_q, spad_k = nq * bq, nk * bk
+    dout_p = jnp.pad(dout, ((0, 0), (0, spad_q - sq), (0, 0), (0, 0)))
+    out_p = jnp.pad(out, ((0, 0), (0, spad_q - sq), (0, 0), (0, 0)))
+    lse_p = jnp.pad(lse, ((0, 0), (0, 0), (0, 0), (0, spad_q - sq)),
+                    constant_values=jnp.inf)
+    qg = qp_.reshape(b, spad_q, hkv, g, dh).astype(jnp.float32)
+    dog = dout_p.reshape(b, spad_q, hkv, g, dv).astype(jnp.float32)
+    og = out_p.reshape(b, spad_q, hkv, g, dv).astype(jnp.float32)
+    dsum = (dog * og).sum(-1)                                  # (B,Sq,Hkv,G)
+    dsum = dsum.transpose(0, 2, 3, 1)                          # (B,Hkv,G,Sq)
+    kg = kp_.reshape(b, nk, bk, hkv, dh).astype(jnp.float32)
+    vg = vp_.reshape(b, nk, bk, hkv, dv).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(spad_q)
+    k_pos = jnp.arange(spad_k).reshape(nk, bk)
+
+    def kv_step(dq_acc, kj):
+        kb, vb = kg[:, kj], vg[:, kj]
+        kp = k_pos[kj]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = jnp.where(q_pos[None, None, None, :, None] >= kp[None, None, None, None, :],
+                          s, -jnp.inf)
+        s = jnp.where(kp[None, None, None, None, :] < sk, s, -jnp.inf)
+        p = jnp.exp(s - lse_p[..., None])                      # (B,Hkv,G,Sq,K)
+        dv_j = jnp.einsum("bhgqk,bqhgv->bkhv", p, dog)
+        dp = jnp.einsum("bqhgv,bkhv->bhgqk", dog, vb)
+        ds = p * (dp - dsum[..., None])
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb) * scale
+        dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg) * scale
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, spad_q, hkv, g, dh), jnp.float32)
+    dq, (dks, dvs) = lax.scan(kv_step, dq0, jnp.arange(nk))
+    dq = dq.reshape(b, spad_q, h, dh)[:, :sq].astype(q.dtype)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, spad_k, hkv, dh)[:, :sk].astype(k.dtype)
+    dv_ = dvs.transpose(1, 0, 2, 3, 4).reshape(b, spad_k, hkv, dv)[:, :sk].astype(v.dtype)
+    return dq, dk, dv_
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    block_q: int = 512, block_k: int = 1024,
+                    kv_len: Optional[jnp.ndarray] = None):
+    """Memory-linear attention with GQA and a flash (recompute) backward.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, Hkv, Dv-capable); H % Hkv == 0.
+    ``q_offset``: absolute position of q[0].  ``kv_len``: dynamic valid
+    length (decode over a cache; that path is not differentiated).
+    Returns (B, Sq, H, Dv).
+    """
+    if kv_len is not None:
+        return _flash_fwd_impl(q, k, v, causal, q_offset, block_q, block_k, kv_len)[0]
+    return _flash(q, k, v, causal, q_offset, block_q, block_k)
+
+
+# ---------------------------------------------------------------- attention layer
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    causal: bool = True
+
+
+def attention_init(key, cfg: AttnConfig, param_dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * cfg.d_head, param_dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * cfg.d_head, param_dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * cfg.d_head, param_dtype),
+        "wo": dense_init(ko, cfg.n_heads * cfg.d_head, cfg.d_model, param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.d_head, param_dtype)
+        p["k_norm"] = rmsnorm_init(cfg.d_head, param_dtype)
+    return p
+
+
+def make_cache(batch, max_len, n_kv_heads, d_head, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, d_head), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, d_head), dtype),
+    }
+
+
+def attention(params, x, cfg: AttnConfig, compute_dtype, *, positions=None,
+              cache=None, cache_index=None, kv_x=None):
+    """Self- or cross-attention.
+
+    Training/prefill: ``cache=None`` → flash attention over x (causal per cfg).
+    Decode: pass ``cache`` + scalar ``cache_index``; x is (B, 1, D); returns
+    (out, new_cache).  Cross-attention: pass ``kv_x`` (B, Skv, D) (encoder
+    memory; non-causal, no rope on cross keys by convention here).
+    """
+    from ..dist.sharding import constrain, constrain_batch, model_divides
+    b, s, _ = x.shape
+    src = x if kv_x is None else kv_x
+    # §Perf it.1: pin projections (B,S,H·dh) to model-sharded on the flat
+    # head dim, but ONLY when the head count divides the model axis — the
+    # constraint on padded-head archs (qwen3 40H, yi 56H) forced reshards
+    # that regressed prefill 5x (measured; see EXPERIMENTS.md §Perf).
+    qm = "model" if model_divides(cfg.n_heads) else None
+    km = "model" if model_divides(cfg.n_kv_heads) else None
+    q = constrain(dense(params["wq"], x, compute_dtype), "dp", None, qm) \
+        .reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = constrain(dense(params["wk"], src, compute_dtype), "dp", None, km) \
+        .reshape(b, src.shape[1], cfg.n_kv_heads, cfg.d_head)
+    v = constrain(dense(params["wv"], src, compute_dtype), "dp", None, km) \
+        .reshape(b, src.shape[1], cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if kv_x is None:  # rope only applies to self-attention
+        if cache is not None and cache_index is not None:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        else:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, jnp.arange(src.shape[1])[None, :], cfg.rope_theta)
+
+    if cache is not None:
+        if cache_index is not None:  # decode: write s (=1) new kv rows
+            k_cache = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                               (0, cache_index, 0, 0))
+            v_cache = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                               (0, cache_index, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            kv_len = cache_index + s
+            out = _decode_attend(q, k_cache, v_cache, kv_len, compute_dtype)
+        else:  # prefill into cache
+            k_cache = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            v_cache = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            out = flash_attention(q, k, v, causal=cfg.causal)
+        out = constrain(out.reshape(b, s, cfg.n_heads * cfg.d_head),
+                        "dp", None, "model")
+        return constrain_batch(dense(params["wo"], out, compute_dtype)), new_cache
+
+    out = flash_attention(q, k, v, causal=cfg.causal and kv_x is None)
+    out = constrain(out.reshape(b, s, cfg.n_heads * cfg.d_head), "dp", None, "model")
+    return constrain_batch(dense(params["wo"], out, compute_dtype))
+
+
+def cross_kv(params, kv_x, cfg: AttnConfig, compute_dtype):
+    """Precompute cross-attention K/V from encoder memory (cache once)."""
+    b, skv, _ = kv_x.shape
+    k = dense(params["wk"], kv_x, compute_dtype).reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    v = dense(params["wv"], kv_x, compute_dtype).reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k)
+    return k, v
+
+
+def attention_with_kv(params, x, k, v, cfg: AttnConfig, compute_dtype):
+    """Cross-attention against precomputed K/V (decode path; non-causal)."""
+    b, s, _ = x.shape
+    q = dense(params["wq"], x, compute_dtype).reshape(b, s, cfg.n_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+    out = _decode_attend(q, k, v, k.shape[1], compute_dtype)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return dense(params["wo"], out, compute_dtype)
+
+
+def _decode_attend(q, k_cache, v_cache, kv_len, compute_dtype):
+    """Single/few-token attention over a cache: O(S) scores, no S×S."""
+    b, s, h, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+    scores = scores * (dh ** -0.5)
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos[None, None, None, None, :] < kv_len
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(compute_dtype),
+                     v_cache.astype(compute_dtype))
+    return out.reshape(b, s, h, dh)

@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with absorbed decode path.
+
+Train/prefill: materialise per-head K/V from the KV latent and run flash
+attention (per-chip activation cost is fine at 4k–32k with sharding+remat).
+
+Decode: the O(S·H·d) per-head K/V would be ~270 GB at decode_32k, so we use
+the *absorbed* form — fold ``W_kb`` into the query and ``W_vb`` after the
+attention — attending directly over the cached ``(S, kv_lora + d_rope)``
+latent.  That cache compression (576 vs 2·H·d_head floats per token) is the
+whole point of MLA and is what the decode dry-run measures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense, dense_init, flash_attention, rmsnorm, rmsnorm_init, rope
+
+__all__ = ["MLAConfig", "mla_init", "mla_apply", "mla_make_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    rope_theta: float = 1e4
+
+
+def mla_init(key, cfg: MLAConfig, param_dtype):
+    ks = jax.random.split(key, 6)
+    h = cfg.n_heads
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, cfg.q_lora, param_dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora, param_dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora, h * (cfg.d_nope + cfg.d_rope), param_dtype),
+        "wkv_a": dense_init(ks[2], cfg.d_model, cfg.kv_lora + cfg.d_rope, param_dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora, param_dtype),
+        "wk_b": dense_init(ks[3], cfg.kv_lora, h * cfg.d_nope, param_dtype),
+        "wv_b": dense_init(ks[4], cfg.kv_lora, h * cfg.d_v, param_dtype),
+        "wo": dense_init(ks[5], h * cfg.d_v, cfg.d_model, param_dtype),
+    }
+
+
+def mla_make_cache(batch, max_len, cfg: MLAConfig, dtype):
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+            "krope": jnp.zeros((batch, max_len, cfg.d_rope), dtype)}
+
+
+def _project_q(params, x, cfg, compute_dtype, positions):
+    b, s, _ = x.shape
+    q = dense(params["wq_b"], rmsnorm(params["q_norm"], dense(params["wq_a"], x, compute_dtype)),
+              compute_dtype).reshape(b, s, cfg.n_heads, cfg.d_nope + cfg.d_rope)
+    q_nope, q_rope = q[..., : cfg.d_nope], q[..., cfg.d_nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(params, x, cfg, compute_dtype, positions):
+    kv = dense(params["wkv_a"], x, compute_dtype)
+    ckv = rmsnorm(params["kv_norm"], kv[..., : cfg.kv_lora])
+    krope = rope(kv[..., None, cfg.kv_lora:], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, krope
+
+
+def mla_apply(params, x, cfg: MLAConfig, compute_dtype, *, positions=None,
+              cache=None, cache_index=None):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _project_q(params, x, cfg, compute_dtype, positions)
+    ckv, krope = _latent(params, x, cfg, compute_dtype, positions)
+
+    if cache is not None and cache_index is not None:  # absorbed decode
+        ckv_c = lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                                         (0, cache_index, 0))
+        krope_c = lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype),
+                                           (0, cache_index, 0))
+        new_cache = {"ckv": ckv_c, "krope": krope_c}
+        wk_b = params["wk_b"]["w"].astype(compute_dtype).reshape(cfg.kv_lora, h, cfg.d_nope)
+        wv_b = params["wv_b"]["w"].astype(compute_dtype).reshape(cfg.kv_lora, h, cfg.d_v)
+        # q absorbed into latent space: (B, s, H, kv_lora)
+        q_lat = jnp.einsum("bshn,khn->bshk", q_nope, wk_b)
+        scores = (jnp.einsum("bshk,btk->bhst", q_lat, ckv_c.astype(compute_dtype),
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshr,btr->bhst", q_rope, krope_c.astype(compute_dtype),
+                               preferred_element_type=jnp.float32))
+        scores = scores * ((cfg.d_nope + cfg.d_rope) ** -0.5)
+        kv_len = cache_index + s
+        tpos = jnp.arange(ckv_c.shape[1])
+        scores = jnp.where(tpos[None, None, None, :] < kv_len, scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btk->bshk", w.astype(compute_dtype),
+                           ckv_c.astype(compute_dtype))
+        out = jnp.einsum("bshk,khv->bshv", o_lat, wv_b)
+        out = out.reshape(b, s, h * cfg.d_v)
+        return dense(params["wo"], out, compute_dtype), new_cache
+
+    # train / prefill: materialise per-head K/V, flash attend.  The per-head
+    # tensors are the memory hot-spot (S·H·d ≫ S·kv_lora); shard the head
+    # dim over `model` (128 heads / 16 = 8 per chip).
+    from ..dist.sharding import constrain
+    wk_b = params["wk_b"]["w"].astype(compute_dtype).reshape(cfg.kv_lora, h, cfg.d_nope)
+    wv_b = params["wv_b"]["w"].astype(compute_dtype).reshape(cfg.kv_lora, h, cfg.d_v)
+    k_nope = constrain(jnp.einsum("btk,khn->bthn", ckv, wk_b),
+                       "dp", None, "model", None)
+    vv = constrain(jnp.einsum("btk,khv->bthv", ckv, wv_b),
+                   "dp", None, "model", None)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], (b, s, h, cfg.d_rope))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kk = constrain(kk, "dp", None, "model", None)
+    qq = constrain(qq, "dp", None, "model", None)
+    out = flash_attention(qq, kk, vv, causal=True)
+    out = out.reshape(b, s, h * cfg.d_v)
+    out_proj = dense(params["wo"], out, compute_dtype)
+    if cache is not None:  # prefill populates the latent cache
+        # align write values with the (feature-sharded) cache layout, so the
+        # DUS doesn't force GSPMD to replicate the whole cache
+        ckv_w = constrain(ckv.astype(cache["ckv"].dtype), "dp", None, "model")
+        krope_w = krope.astype(cache["krope"].dtype)
+        ckv_c = lax.dynamic_update_slice(cache["ckv"], ckv_w, (0, 0, 0))
+        krope_c = lax.dynamic_update_slice(cache["krope"], krope_w, (0, 0, 0))
+        return out_proj, {"ckv": ckv_c, "krope": krope_c}
+    return out_proj

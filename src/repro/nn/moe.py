@@ -1,0 +1,149 @@
+"""Mixture-of-Experts layer with sort-based (Megablocks-style) dispatch.
+
+Design targets expert parallelism on TPU: expert weights are stacked
+``(E, ...)`` and shard over the ``model`` mesh axis; tokens are grouped so
+routing/capacity is decided *within a group* (groups shard over ``data``),
+keeping the dispatch math local and letting GSPMD lower the
+token↔expert-buffer scatter into all-to-alls instead of a global sort.
+
+Dispatch per group (all static shapes, O(N log N) sort — no (N, E) one-hot
+materialisation):
+  1. top-k routing → (token, expert) pairs;
+  2. stable argsort pairs by expert; the start offset of each expert in the
+     sorted order comes from a vmapped ``searchsorted`` (no bincount);
+  3. rank-within-expert = position − start; slots beyond the static capacity
+     ``C = ceil(Nk/E · capacity_factor)`` are dropped (scattered to a
+     sacrificial row), matching production capacity semantics;
+  4. expert FFN is one batched einsum over the ``(E, C, D)`` buffer;
+  5. results unsort + weighted-combine over the k routes.
+
+Shared ("always-on") experts — DeepSeek-V2 style — and a parallel dense
+residual branch — Arctic style — are composed in the model layer, not here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..dist.sharding import constrain
+from .layers import dense_init
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    groups: int = 256          # token groups; actual = gcd(N, groups)
+    renorm: bool = True        # renormalise top-k gate weights
+    aux_weight: float = 0.01   # load-balance loss weight
+
+
+def moe_init(key, cfg: MoEConfig, param_dtype):
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s_in, s_out = (1.0 / d) ** 0.5, (1.0 / f) ** 0.5
+    return {
+        "router": dense_init(kr, d, e, jnp.float32),  # router in f32 for stable softmax
+        "wi": jax.random.normal(ki, (e, d, f), param_dtype) * s_in,
+        "wg": jax.random.normal(kg, (e, d, f), param_dtype) * s_in,
+        "wo": jax.random.normal(ko, (e, f, d), param_dtype) * s_out,
+    }
+
+
+def moe_apply(params, x, cfg: MoEConfig, compute_dtype):
+    """x: (B, S, D) → (out (B, S, D), aux_loss scalar).
+
+    Two sharding regimes (§Perf iteration 3):
+      * training / prefill (many tokens): tokens group-sharded over data,
+        experts over model — canonical EP; expert weights are FSDP-gathered
+        over data per layer (amortised by ~1M tokens).
+      * decode (few tokens): the same FSDP gather costs 5.3 GB/layer to
+        produce 128 tokens (measured on arctic decode_32k — 97% of its wire
+        bytes).  Here token groups are left replicated over data and the
+        expert FFN runs on data-sharded weight slices (f-dim), so weights
+        never move; only the tiny (g,e,c,D) partial sums are reduced.
+    """
+    b, s, d = x.shape
+    n = b * s
+    g = math.gcd(n, cfg.groups)
+    ng = n // g
+    e, k = cfg.n_experts, cfg.top_k
+    nk = ng * k
+    cap = max(1, int(math.ceil(nk / e * cfg.capacity_factor)))
+    inference = n <= 4096  # decode-scale token counts
+    dp = None if inference else "dp"
+
+    # token groups shard over the data axes; expert buffers over `model` (EP).
+    xf = constrain(x.reshape(g, ng, d), dp, None, None)
+    logits = jnp.einsum("gnd,de->gne", xf.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = lax.top_k(probs, k)  # (G, Ng, k)
+    if cfg.renorm:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(g, nk)
+    order = jnp.argsort(flat_e, axis=1, stable=True)            # (G, Nk)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    pos = jnp.arange(nk)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=1)
+    dest = jnp.where(pos < cap, sorted_e * cap + pos, e * cap)   # overflow → row E*C
+    # §Perf it.5: GSPMD lost the G-sharding of the dispatch indices through
+    # argsort/searchsorted (it picked (None, data) layouts, then had to
+    # all-gather (G,Nk,D)-broadcast index grids at every scatter — ~8 GB per
+    # layer on deepseek train).  Pin them to the token-group layout.
+    order = constrain(order, dp, None)
+    dest = constrain(dest, dp, None)
+
+    tok = order // k                                             # source token per slot
+    # §Perf it.4: row-gather via vmap, NOT take_along_axis — the latter
+    # broadcasts its index array across D ((G,Nk,D) u32 grids that GSPMD
+    # then all-gathers: 5×960 MB/layer on deepseek train).  vmap'd indexing
+    # lowers to a batched gather with (G,Nk) indices.
+    xs = jax.vmap(lambda rows, idx2: rows[idx2])(xf, tok)        # (G, Nk, D)
+    xs = constrain(xs.astype(compute_dtype), dp, None, "model")
+    buf = jnp.zeros((g, e * cap + 1, d), compute_dtype)
+    # scatter with the indexed dim unsharded (D model-sharded is fine);
+    # the constraint AFTER the reshape flips D-sharded -> E-sharded, which
+    # GSPMD lowers to the canonical MoE all-to-all (token -> expert layout).
+    buf = constrain(buf.at[jnp.arange(g)[:, None], dest].set(xs, unique_indices=True, mode='promise_in_bounds'),
+                    dp, None, "model")
+    ebuf = constrain(buf[:, : e * cap].reshape(g, e, cap, d),
+                     dp, "model", None, None)
+
+    wi = params["wi"].astype(compute_dtype)
+    wg = params["wg"].astype(compute_dtype)
+    wo = params["wo"].astype(compute_dtype)
+    h = jnp.einsum("gecd,edf->gecf", ebuf, wi)
+    h = h * jax.nn.silu(jnp.einsum("gecd,edf->gecf", ebuf, wg))
+    if not inference:
+        h = constrain(h, dp, "model", None, None)
+    eout = jnp.einsum("gecf,efd->gecd", h, wo)
+    eout = constrain(eout, dp, "model", None, None)
+
+    outb = jnp.concatenate(
+        [eout.reshape(g, e * cap, d), jnp.zeros((g, 1, d), compute_dtype)], axis=1)
+    outb = constrain(outb, dp, None, "model")  # expert -> token all-to-all back
+    out_sorted = jax.vmap(lambda rows, idx2: rows[idx2])(outb, dest)  # (G, Nk, D)
+    out_flat = jnp.zeros((g, nk, d), compute_dtype)
+    out_flat = out_flat.at[jnp.arange(g)[:, None], order].set(out_sorted, unique_indices=True, mode='promise_in_bounds')
+    out = (out_flat.reshape(g, ng, k, d)
+           * gate[..., None].astype(compute_dtype)).sum(axis=2)
+    out = constrain(out, dp, None, None)
+
+    # Switch-style load-balance aux: E * <f_e * P_e>.
+    counts = jnp.diff(starts, axis=1, append=jnp.full((g, 1), nk))
+    f_e = counts.astype(jnp.float32) / nk
+    p_e = probs.mean(axis=1)
+    aux = cfg.aux_weight * e * (f_e * p_e).sum(-1).mean()
+    return out.reshape(b, s, d).astype(x.dtype), aux

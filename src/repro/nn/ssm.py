@@ -1,0 +1,197 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm.
+
+Recurrence (per head h, state (N, P)):
+    S_t = exp(dt_t·A_h) · S_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · S_t + D_h · x_t
+
+Training/prefill uses the chunked SSD form: within a chunk of length Q the
+quadratic "attention-like" term ``C_i·B_j · exp(cs_i−cs_j) · dt_j`` is a
+(Q, Q) matmul (MXU-friendly); across chunks a linear ``lax.scan`` carries
+the (H, N, P) state.  All decays are ≤ 1 (A < 0, dt > 0) so the f32 exp is
+stable.  Decode is the O(1) recurrence with a (H, N, P) state cache plus a
+(d_conv−1)-deep conv window cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense, dense_init
+
+__all__ = ["SSMConfig", "ssm_init", "ssm_apply", "ssm_decode", "ssm_make_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    expand: int = 2
+    d_conv: int = 4
+    headdim: int = 64
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def d_xbc(self) -> int:
+        return self.d_inner + 2 * self.d_state  # x, B, C (single group)
+
+
+def ssm_init(key, cfg: SSMConfig, param_dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.d_state + cfg.n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, d_in_proj, param_dtype),
+        "conv_w": jax.random.normal(k2, (cfg.d_conv, cfg.d_xbc), param_dtype)
+                  * (1.0 / cfg.d_conv) ** 0.5,
+        "conv_b": jnp.zeros((cfg.d_xbc,), param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)).astype(jnp.float32),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "dt_bias": jnp.full((cfg.n_heads,), -2.0, jnp.float32),
+        "norm_g": jnp.ones((cfg.d_inner,), param_dtype),
+        "out_proj": dense_init(k3, cfg.d_inner, cfg.d_model, param_dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, ds, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + cfg.d_xbc]
+    dt = zxbcdt[..., di + cfg.d_xbc :]
+    return z, xbc, dt
+
+
+def _gated_norm(y, z, g, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    y32 = y.astype(jnp.float32)
+    y32 = y32 * lax.rsqrt(jnp.mean(y32 * y32, axis=-1, keepdims=True) + eps)
+    return (y32 * g.astype(jnp.float32)).astype(y.dtype)
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv, window K, via K shifted adds (shard-friendly)."""
+    k = conv_w.shape[0]
+    out = xbc * conv_w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * conv_w[-1 - i]
+    return jax.nn.silu(out + conv_b)
+
+
+def ssm_apply(params, u, cfg: SSMConfig, compute_dtype, *, return_state: bool = False):
+    """u: (B, S, d_model) → (B, S, d_model). S must be a multiple of... any S
+    (padded internally to the chunk size)."""
+    b, s, _ = u.shape
+    from ..dist.sharding import constrain, constrain_batch
+    zxbcdt = constrain(dense(params["in_proj"], constrain_batch(u), compute_dtype),
+                       "dp", None, "model")
+    z, xbc_raw, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc_raw, params["conv_w"].astype(compute_dtype),
+                       params["conv_b"].astype(compute_dtype))
+    di, ds, nh, p = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    x = xbc[..., :di].reshape(b, s, nh, p)
+    bmat = xbc[..., di : di + ds]                     # (B, S, N)
+    cmat = xbc[..., di + ds :]                        # (B, S, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                          # (H,) < 0
+    da = dt * a                                                            # (B,S,H) < 0
+
+    q = min(cfg.chunk, s)
+    pad = (-s) % q
+    # padded positions must be identity steps (decay=1, zero input) so the
+    # final state returned for prefill is exact: dt=0 achieves both.
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    xc = x.reshape(b, nc, q, nh, p)
+    bc = bmat.reshape(b, nc, q, ds)
+    cc = cmat.reshape(b, nc, q, ds)
+    dtc = dt.reshape(b, nc, q, nh)
+    dac = da.reshape(b, nc, q, nh)
+
+    cs = jnp.cumsum(dac, axis=2)                       # inclusive, (B,nc,Q,H)
+    # --- intra-chunk (quadratic within Q) ---
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc, preferred_element_type=jnp.float32)
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xdt)
+
+    # --- inter-chunk state scan ---
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)               # decay from t to chunk end
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc.astype(jnp.float32),
+                              seg, xdt)                # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])             # (B,nc,H)
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, nh, ds, p), jnp.float32)
+    s_last, s_prevs = lax.scan(step, s0,
+                               (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                   # (B,nc,H,N,P): state before chunk
+    instate_decay = jnp.exp(cs)                        # decay of boundary state to pos i
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", cc.astype(jnp.float32),
+                         s_prevs, instate_decay)
+
+    y = (y_intra + y_inter + params["D"][:, None] * xc.astype(jnp.float32))
+    y = y.reshape(b, nc * q, di)[:, :s].astype(compute_dtype)
+    y = _gated_norm(y, z, params["norm_g"])
+    out = constrain_batch(dense(params["out_proj"], y, compute_dtype))
+    if return_state:
+        # conv cache holds the raw (pre-conv) projections of the last K-1 steps
+        tail = xbc_raw[:, s - (cfg.d_conv - 1):]
+        return out, {"ssm": s_last, "conv": tail}
+    return out
+
+
+def ssm_make_cache(batch, cfg: SSMConfig, dtype):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_xbc), dtype),
+    }
+
+
+def ssm_decode(params, u, cfg: SSMConfig, compute_dtype, cache):
+    """Single-token step.  u: (B, 1, d_model) → (out (B,1,d_model), cache)."""
+    b = u.shape[0]
+    zxbcdt = dense(params["in_proj"], u, compute_dtype)
+    z, xbc_t, dt_raw = _split_proj(zxbcdt[:, 0], cfg)
+    window = jnp.concatenate([cache["conv"], xbc_t[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv_w = params["conv_w"].astype(compute_dtype)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window.astype(compute_dtype), conv_w)
+                      + params["conv_b"].astype(compute_dtype))
+    new_conv = window[:, 1:]
+
+    di, ds, nh, p = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    x = xbc[:, :di].reshape(b, nh, p).astype(jnp.float32)
+    bvec = xbc[:, di : di + ds].astype(jnp.float32)
+    cvec = xbc[:, di + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt * a)                                                  # (B,H)
+    s_new = (cache["ssm"] * dec[..., None, None]
+             + jnp.einsum("bn,bh,bhp->bhnp", bvec, dt, x))
+    y = jnp.einsum("bn,bhnp->bhp", cvec, s_new) + params["D"][:, None] * x
+    y = y.reshape(b, di).astype(compute_dtype)
+    y = _gated_norm(y[:, None, :], z[:, None, :], params["norm_g"])
+    out = dense(params["out_proj"], y, compute_dtype)
+    return out, {"ssm": s_new, "conv": new_conv}

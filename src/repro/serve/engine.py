@@ -1,0 +1,126 @@
+"""Batched serving engine: prefill + KV-cache decode over request waves.
+
+Requests are queued, bucketed by prompt length (so right-padded garbage
+never enters the causal cache — correctness over cleverness), and executed
+in *waves*: one batched prefill, then lock-step batched decode until every
+sequence in the wave hits EOS or its token budget.  Finished slots idle to
+wave end; per-slot paged caches (continuous batching) are the documented
+next step and don't change the lowering the dry-run measures — ``decode_32k``
+lowers exactly this engine's ``decode_step``.
+
+Greedy or temperature sampling; fully deterministic given (seed, queue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, *, prefill_fn: Callable, decode_fn: Callable,
+                 make_cache_fn: Callable, batch_size: int, max_len: int,
+                 eos_id: Optional[int] = None, temperature: float = 0.0,
+                 seed: int = 0):
+        self.prefill_fn = jax.jit(prefill_fn)
+        self.decode_fn = jax.jit(decode_fn)
+        self.make_cache_fn = make_cache_fn
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._queue: deque[Request] = deque()
+        self._next_uid = 0
+        self.completed: dict[int, Request] = {}
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, list(prompt), max_new_tokens))
+        return uid
+
+    def _next_wave(self) -> list[Request]:
+        if not self._queue:
+            return []
+        buckets: dict[int, list[Request]] = defaultdict(list)
+        for r in self._queue:
+            buckets[len(r.prompt)].append(r)
+        # largest bucket first: best batch utilisation
+        length = max(buckets, key=lambda k: len(buckets[k]))
+        wave = buckets[length][: self.batch_size]
+        for r in wave:
+            self._queue.remove(r)
+        return wave
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.argmax(logits, axis=-1)
+        self.key, k = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(k, jnp.asarray(logits) / self.temperature))
+
+    def step(self) -> list[Request]:
+        """Run one full wave; returns the finished requests."""
+        wave = self._next_wave()
+        if not wave:
+            return []
+        b = self.batch_size
+        plen = len(wave[0].prompt)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(wave):
+            prompts[i] = r.prompt
+        cache = self.make_cache_fn(b, self.max_len)
+        logits, cache = self.prefill_fn(jnp.asarray(prompts), cache)
+        logits = np.asarray(logits)[:, -1]  # (B, V)
+        budget = max(r.max_new_tokens for r in wave)
+        active = np.array([i < len(wave) for i in range(b)])
+        pos = plen
+        tok = self._sample(logits)
+        for i, r in enumerate(wave):
+            t = int(tok[i])
+            r.output.append(t)
+            if (self.eos_id is not None and t == self.eos_id) \
+                    or len(r.output) >= r.max_new_tokens:
+                r.done = True
+                active[i] = False
+        for _ in range(budget - 1):
+            if not active.any() or pos >= self.max_len - 1:
+                break
+            logits, cache = self.decode_fn(jnp.asarray(tok[:, None], jnp.int32),
+                                           pos, cache)
+            pos += 1
+            tok = self._sample(np.asarray(logits)[:, -1])
+            for i, r in enumerate(wave):
+                if not active[i] or r.done:
+                    continue
+                t = int(tok[i])
+                r.output.append(t)
+                if (self.eos_id is not None and t == self.eos_id) \
+                        or len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    active[i] = False
+        for r in wave:
+            r.done = True
+            self.completed[r.uid] = r
+        return wave
+
+    def run_until_drained(self) -> dict[int, Request]:
+        while self._queue:
+            self.step()
+        return self.completed

@@ -1,0 +1,192 @@
+"""Fault-tolerant training loop.
+
+Properties engineered for 1000+-node runs and tested here at small scale:
+
+* **restart determinism** — data is stateless-per-step and the PRNG is
+  folded from the step counter, so kill-at-step-k + resume replays the
+  exact stream; the restart test asserts bitwise-equal losses.
+* **atomic async checkpoints** — see ``repro.ckpt``; the loop resumes from
+  the newest *valid* checkpoint (corrupt/partial ones are skipped).
+* **straggler watchdog** — per-step wall time is tracked; steps slower
+  than ``watchdog_factor ×`` the running median are logged as straggler
+  events (on a real cluster this feeds the reshard/evict policy; here it
+  surfaces in metrics so tests can assert on it).
+* **gradient compression** — optional bf16/int8 error-feedback reduction
+  for the data-parallel axis (shard_map path; see repro.dist.compress).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..ckpt import checkpoint as ckpt
+from ..dist.compress import ef_psum_grads, init_error_state
+from ..optim.optimizers import Optimizer, clip_by_global_norm
+
+__all__ = ["TrainConfig", "init_state", "make_train_step", "make_dp_train_step",
+           "Trainer", "SimulatedFailure"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by the loop's fault-injection hook (tests)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    num_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    clip_norm: Optional[float] = None
+    watchdog_factor: float = 3.0
+
+
+def init_state(params, optimizer: Optimizer):
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(loss_fn, optimizer: Optimizer, *, clip_norm=None,
+                    accum: int = 1, accum_dtype=jnp.float32):
+    """Standard pjit-able step: grads → (clip) → optimizer → new state.
+
+    ``accum`` > 1 enables gradient accumulation: the global batch is split
+    into ``accum`` microbatches processed by a ``lax.scan`` (activation
+    memory ÷ accum — what lets the 34B+ archs fit 16 GB/chip at the
+    assigned train_4k batch of 256 sequences).  Gradients accumulate in
+    f32; loss/metrics are microbatch means, bitwise independent of accum
+    for linear losses.
+    """
+
+    def _grads(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def step(state, batch):
+        if accum == 1:
+            (loss, metrics), grads = _grads(state["params"], batch)
+        else:
+            from ..dist.sharding import constrain_batch
+
+            def split(x):
+                mb = x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+                return mb
+
+            micro = jax.tree.map(split, batch)
+
+            def mb_step(carry, mbatch):
+                g_acc, loss_acc = carry
+                mbatch = jax.tree.map(constrain_batch, mbatch)
+                (loss, metrics), g = _grads(state["params"], mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              state["params"])
+            (grads, loss_sum), metricss = jax.lax.scan(
+                mb_step, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda m: m.mean(), metricss)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = dict(metrics, grad_norm=gnorm)
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, dict(metrics, loss=loss)
+
+    return step
+
+
+def make_dp_train_step(loss_fn, optimizer: Optimizer, mesh, *,
+                       compress: str = "bf16", clip_norm=None, axis: str = "data"):
+    """Explicit data-parallel step via shard_map with compressed grad reduction.
+
+    Params/opt-state replicated; batch sharded over ``axis``; gradients
+    reduced with bf16/int8 error feedback (state carried in ``state['err']``).
+    The per-replica update math is identical, so replicas stay bitwise
+    consistent without re-broadcast.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def _step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        grads, new_err = ef_psum_grads(grads, state["err"], axis_name=axis,
+                                       mode=compress)
+        loss = jax.lax.pmean(loss, axis)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, axis), metrics)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = dict(metrics, grad_norm=gnorm)
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1, "err": new_err}
+        return new_state, dict(metrics, loss=loss)
+
+    return shard_map(_step, mesh=mesh,
+                     in_specs=(P(), P(axis)),
+                     out_specs=(P(), P()),
+                     check_rep=False)
+
+
+def init_dp_state(params, optimizer: Optimizer):
+    grads_like = params
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32), "err": init_error_state(grads_like)}
+
+
+class Trainer:
+    def __init__(self, train_step, cfg: TrainConfig, *, batch_at: Callable[[int], Any]):
+        self.train_step = jax.jit(train_step)
+        self.cfg = cfg
+        self.batch_at = batch_at
+        self.checkpointer = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+                             if cfg.ckpt_dir else None)
+        self.straggler_events: list[tuple[int, float]] = []
+
+    def resume_or(self, state):
+        """Resume from the newest valid checkpoint, else the given state."""
+        if self.cfg.ckpt_dir:
+            step, restored, _ = ckpt.restore_latest(self.cfg.ckpt_dir, state)
+            if restored is not None:
+                return restored
+        return state
+
+    def run(self, state, *, fail_at_step: Optional[int] = None):
+        cfg = self.cfg
+        history = []
+        durations: list[float] = []
+        start = int(state["step"])
+        for step in range(start, cfg.num_steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            batch = self.batch_at(step)
+            t0 = time.monotonic()
+            state, metrics = self.train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            if len(durations) >= 5:
+                med = statistics.median(durations[-50:])
+                if dt > cfg.watchdog_factor * med:
+                    self.straggler_events.append((step, dt / med))
+            durations.append(dt)
+            if step % cfg.log_every == 0 or step == cfg.num_steps - 1:
+                history.append((step, float(metrics["loss"])))
+            if self.checkpointer and (step + 1) % cfg.ckpt_every == 0:
+                self.checkpointer.save(step + 1, state)
+        if self.checkpointer:
+            self.checkpointer.save(cfg.num_steps, state)
+            self.checkpointer.wait()
+        return state, history

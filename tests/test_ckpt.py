@@ -1,0 +1,84 @@
+"""Checkpointing: roundtrip, integrity fallback, async, pruning, resharding."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "tables": [jax.random.normal(k, (10, 2)),
+                                  jax.random.normal(k, (5, 2))]},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 7, tree)
+    restored, manifest = ckpt.restore(str(tmp_path), 7, tree)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_prune(tmp_path):
+    tree = _tree()
+    for s in (10, 20, 30, 40):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    assert ckpt.available_steps(str(tmp_path)) == [30, 40]
+    assert ckpt.latest_step(str(tmp_path)) == 40
+
+
+def test_corrupt_falls_back_to_previous(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 10, tree)
+    ckpt.save(str(tmp_path), 20, tree)
+    # corrupt the newest checkpoint's first leaf file
+    d = os.path.join(str(tmp_path), "step_00000020")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    victim = os.path.join(d, manifest["leaves"][0]["file"])
+    with open(victim, "wb") as f:
+        f.write(b"garbage")
+    step, restored, _ = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 10 and restored is not None
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), 20, tree)
+
+
+def test_interrupted_write_is_invisible(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 10, tree)
+    # simulate a crash mid-write: a .tmp dir left behind
+    os.makedirs(os.path.join(str(tmp_path), "step_00000099.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
+def test_async_checkpointer(tmp_path):
+    tree = _tree()
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    ac.save(5, tree)
+    ac.save(6, tree)  # waits for 5 internally
+    ac.wait()
+    assert ckpt.available_steps(str(tmp_path)) == [5, 6]
+
+
+def test_restore_respects_target_dtype(tmp_path):
+    tree = {"w": jnp.ones((4, 4), jnp.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    restored, _ = ckpt.restore(str(tmp_path), 1, like)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})

@@ -1,0 +1,121 @@
+"""Compositional/hash/path embeddings: semantics, params, factory (paper §2/§4)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CompositionalEmbedding, EmbeddingSpec, FullEmbedding,
+                        HashEmbedding, PathBasedEmbedding, bag_pool,
+                        make_embedding, qr_embedding, qr_partitions)
+
+
+def test_qr_matches_manual_lookup():
+    emb = qr_embedding(103, 8, num_collisions=4, op="mult")
+    p = emb.init(jax.random.PRNGKey(0))
+    idx = jnp.arange(103)
+    m = emb.partitions[0].num_buckets
+    want = p["table_0"][idx % m] * p["table_1"][idx // m]
+    np.testing.assert_allclose(emb.apply(p, idx), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", ["mult", "add", "concat"])
+def test_ops_shapes_and_param_counts(op):
+    emb = qr_embedding(1000, 16, num_collisions=10, op=op)
+    p = emb.init(jax.random.PRNGKey(1))
+    out = emb.apply(p, jnp.array([[0, 999], [5, 17]]))
+    assert out.shape == (2, 2, 16)
+    # QR total rows ~ m + ceil(S/m) << S
+    assert emb.num_params < FullEmbedding(1000, 16).num_params / 5
+
+
+def test_compression_ratio_matches_collisions():
+    """Paper §5.3: c collisions ≈ c× fewer embedding parameters."""
+    full = FullEmbedding(100000, 16)
+    for c in (2, 4, 60):
+        emb = qr_embedding(100000, 16, num_collisions=c)
+        ratio = full.num_params / emb.num_params
+        assert 0.8 * c <= ratio <= 1.2 * c, (c, ratio)
+
+
+def test_hash_collides_qr_does_not():
+    size, c = 64, 4
+    hash_emb = HashEmbedding(size, 4, m=size // c)
+    qr = qr_embedding(size, 4, num_collisions=c)
+    hp = hash_emb.init(jax.random.PRNGKey(2))
+    qp = qr.init(jax.random.PRNGKey(3))
+    idx = jnp.arange(size)
+    h_rows = np.asarray(hash_emb.apply(hp, idx))
+    q_rows = np.asarray(qr.apply(qp, idx))
+    assert len(np.unique(h_rows.round(6), axis=0)) < size  # hashing collides
+    assert len(np.unique(q_rows.round(6), axis=0)) == size  # QR stays unique
+
+
+def test_feature_generation_mode():
+    emb = qr_embedding(100, 8, num_collisions=4)
+    p = emb.init(jax.random.PRNGKey(4))
+    feats = emb.partition_embeddings(p, jnp.arange(10))
+    assert len(feats) == 2 and all(f.shape == (10, 8) for f in feats)
+
+
+def test_path_based_embedding():
+    pe = PathBasedEmbedding(100, 16, partitions=tuple(qr_partitions(100, 25)),
+                            hidden=8)
+    p = pe.init(jax.random.PRNGKey(5))
+    out = pe.apply(p, jnp.arange(100))
+    assert out.shape == (100, 16)
+    assert np.isfinite(np.asarray(out)).all()
+    # distinct categories in the same base bucket get different outputs
+    # (different MLP path): 0 and 25 share remainder bucket? base is partition 0
+    assert not np.allclose(np.asarray(out[0]), np.asarray(out[25]))
+
+
+def test_factory_threshold_rule():
+    spec = EmbeddingSpec(kind="qr", num_collisions=4, threshold=500)
+    small = make_embedding(100, 16, spec)
+    big = make_embedding(10000, 16, spec)
+    assert isinstance(small, FullEmbedding)
+    assert isinstance(big, CompositionalEmbedding)
+
+
+def test_factory_kinds():
+    for kind, cls in [("full", FullEmbedding), ("hash", HashEmbedding),
+                      ("qr", CompositionalEmbedding),
+                      ("mixed_radix", CompositionalEmbedding),
+                      ("path", PathBasedEmbedding)]:
+        emb = make_embedding(1000, 8, EmbeddingSpec(kind=kind))
+        assert isinstance(emb, cls), kind
+        p = emb.init(jax.random.PRNGKey(0))
+        assert emb.apply(p, jnp.arange(5)).shape[-1] == 8
+
+
+def test_crt_factory():
+    emb = make_embedding(1000, 8, EmbeddingSpec(kind="crt", ms=(32, 33)))
+    p = emb.init(jax.random.PRNGKey(0))
+    out = emb.apply(p, jnp.arange(1000))
+    assert len(np.unique(np.asarray(out).round(6), axis=0)) == 1000
+
+
+def test_bag_pool_masking():
+    emb = qr_embedding(50, 8, num_collisions=2)
+    p = emb.init(jax.random.PRNGKey(6))
+    idx = jnp.array([[1, 2, 3], [4, 5, 6]])
+    mask = jnp.array([[1.0, 0.0, 1.0], [1.0, 1.0, 0.0]])
+    out = bag_pool(emb, p, idx, mask)
+    want0 = emb.apply(p, jnp.array(1)) + emb.apply(p, jnp.array(3))
+    np.testing.assert_allclose(out[0], want0, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 500), st.integers(1, 64), st.sampled_from(["mult", "add", "concat"]))
+def test_uniqueness_property_all_ops(size, c, op):
+    """All-categories embedding matrix has no duplicate rows (generic init)."""
+    dim = 8 if op != "concat" else 8
+    emb = qr_embedding(size, dim, num_collisions=min(c, size), op=op)
+    p = emb.init(jax.random.PRNGKey(size * 31 + c))
+    rows = np.asarray(emb.apply(p, jnp.arange(size)), np.float64)
+    assert len(np.unique(rows.round(10), axis=0)) == size

@@ -1,0 +1,82 @@
+"""Optimizers: convergence on a quadratic, state shapes, partitioned dispatch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizers import (adafactor, adagrad, adam,
+                                    clip_by_global_norm, constant_schedule,
+                                    cosine_schedule, global_norm, partitioned,
+                                    rowwise_adagrad, sgd)
+
+TARGET = jnp.array([[1.0, -2.0], [3.0, 0.5]])
+
+
+def _quad_loss(params):
+    return jnp.sum((params["w"] - TARGET) ** 2), {}
+
+
+@pytest.mark.parametrize("opt", [
+    sgd(0.1), sgd(0.05, momentum=0.9), adagrad(0.5), rowwise_adagrad(0.5),
+    adam(0.1), adam(0.1, amsgrad=True), adafactor(0.2),
+])
+def test_converges_on_quadratic(opt):
+    params = {"w": jnp.zeros((2, 2))}
+    state = opt.init(params)
+    for step in range(300):
+        grads = jax.grad(lambda p: _quad_loss(p)[0])(params)
+        params, state = opt.update(grads, state, params, step)
+    np.testing.assert_allclose(params["w"], TARGET, atol=0.2)
+
+
+def test_rowwise_state_is_per_row():
+    opt = rowwise_adagrad(0.1)
+    params = {"table": jnp.zeros((100, 16)), "bias": jnp.zeros((7,))}
+    state = opt.init(params)
+    shapes = [s["acc"].shape for s in state]
+    assert (7,) in shapes and (100, 1) in shapes
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(0.1)
+    params = {"w": jnp.zeros((64, 32))}
+    st = opt.init(params)[0]
+    assert st["vr"].shape == (64,) and st["vc"].shape == (32,)
+
+
+def test_partitioned_routes_by_path():
+    opt = partitioned([(lambda p: "tables" in p, rowwise_adagrad(0.5))],
+                      adam(0.1))
+    params = {"tables": [{"table_0": jnp.zeros((10, 4))}], "mlp": {"w": jnp.zeros((3, 3))}}
+    state = opt.init(params)
+    # dict keys flatten alphabetically: mlp (adam: m/v) before tables (rowwise acc)
+    assert "m" in state[0] and state[0]["m"].shape == (3, 3)
+    assert state[1]["acc"].shape == (10, 1)
+    grads = jax.tree.map(jnp.ones_like, params)
+    new_params, _ = opt.update(grads, state, params, 0)
+    assert not np.allclose(np.asarray(new_params["mlp"]["w"]), 0.0)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 100
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(sched(0)) < 0.2
+    assert abs(float(sched(10)) - 1.0) < 0.1
+    assert float(sched(99)) < 0.2
+    assert float(constant_schedule(0.3)(50)) == pytest.approx(0.3)
+
+
+def test_bf16_params_stay_bf16():
+    opt = adam(0.1)
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    state = opt.init(params)
+    grads = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    new_params, _ = opt.update(grads, state, params, 0)
+    assert new_params["w"].dtype == jnp.bfloat16

@@ -1,0 +1,86 @@
+"""Property tests (hypothesis) for complementary partitions — paper §3 + Thm 1."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CompositionalEmbedding, codes_for, crt_partitions,
+                        generalized_qr_partitions, is_complementary,
+                        min_collision_free_m, naive_partition, qr_partitions,
+                        qr_embedding)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 400), st.data())
+def test_qr_partitions_complementary(size, data):
+    m = data.draw(st.integers(1, size))
+    parts = qr_partitions(size, m)
+    assert is_complementary(parts, size)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 300), st.lists(st.integers(2, 7), min_size=2, max_size=4))
+def test_generalized_qr_complementary(size, ms):
+    prod = int(np.prod(ms))
+    if prod < size:
+        with pytest.raises(ValueError):
+            generalized_qr_partitions(size, ms)
+        return
+    parts = generalized_qr_partitions(size, ms)
+    assert is_complementary(parts, size)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 200))
+def test_crt_complementary(size):
+    # coprime pair (m, m+1) with product >= size
+    m = int(np.ceil(np.sqrt(size)))
+    parts = crt_partitions(size, [m, m + 1])
+    assert is_complementary(parts, size)
+
+
+def test_crt_rejects_non_coprime():
+    with pytest.raises(ValueError):
+        crt_partitions(10, [4, 6])
+
+
+def test_naive_partition_is_complementary():
+    parts = naive_partition(17)
+    assert is_complementary(parts, 17)
+    assert parts[0].num_buckets == 17
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 300), st.data())
+def test_theorem1_uniqueness(size, data):
+    """Thm 1: with distinct per-table rows, concat embeddings are unique.
+    Code tuples being injective is the discrete core of the theorem."""
+    m = data.draw(st.integers(1, size))
+    emb = qr_embedding(size, 8, num_collisions=max(1, size // m), op="concat")
+    codes = np.asarray(codes_for(emb.partitions, jnp.arange(size)))
+    assert len(np.unique(codes, axis=0)) == size
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 10000))
+def test_min_collision_free_m(size):
+    m = min_collision_free_m(size)
+    assert m * m >= size  # m=ceil(sqrt) covers the set with the QR pair
+    parts = qr_partitions(size, m)
+    assert parts[0].num_buckets + parts[1].num_buckets <= 2 * m + 1
+
+
+def test_paper_example_section3():
+    """The concrete example from paper §3 is complementary."""
+    import numpy as np
+
+    from repro.core import ExplicitPartition
+    p1 = ExplicitPartition(size=5, num_buckets=3, table=np.array([0, 1, 2, 1, 1]))
+    p2 = ExplicitPartition(size=5, num_buckets=2, table=np.array([0, 0, 1, 0, 1]))
+    p3 = ExplicitPartition(size=5, num_buckets=2, table=np.array([0, 1, 1, 0, 1]))
+    assert is_complementary([p1, p2, p3], 5)
+    # dropping the first partition breaks it (1 and 4 collide everywhere)
+    assert not is_complementary([p2, p3], 5)

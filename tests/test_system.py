@@ -1,0 +1,92 @@
+"""End-to-end system behaviour: the paper's full pipeline on CPU.
+
+Covers: QR-compressed DLRM training end-to-end (the paper's headline
+claim — QR quality ≥ hashing at equal compression), LM training with a
+QR-compressed vocab, and train→checkpoint→serve round trip.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import EmbeddingSpec
+from repro.data.criteo import CriteoSpec, batch_at
+from repro.data.lm import batch_at as lm_batch_at
+from repro.models import lm as lm_mod
+from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn, dlrm_num_params
+from repro.models.lm import LMConfig
+from repro.optim.optimizers import adagrad, adam
+from repro.serve.engine import ServeEngine
+from repro.train.loop import init_state, make_train_step
+
+SPEC = CriteoSpec(table_sizes=(1000, 20000, 50, 12000, 31), zipf=1.5, noise=0.5)
+
+
+def _train_dlrm(embedding: EmbeddingSpec, steps=250, seed=0, batch=256):
+    cfg = DLRMConfig(table_sizes=SPEC.table_sizes, embedding=embedding)
+    params = dlrm_init(jax.random.PRNGKey(seed), cfg)
+    opt = adagrad(1e-2)
+    state = init_state(params, opt)
+    step = jax.jit(make_train_step(lambda p, b: dlrm_loss_fn(p, b, cfg), opt))
+    losses = []
+    for i in range(steps):
+        state, m = step(state, batch_at(7, i, batch, SPEC))
+        losses.append(float(m["loss"]))
+    return cfg, np.mean(losses[-25:])
+
+
+def test_paper_headline_qr_beats_hash_at_equal_compression():
+    """Paper §5.3/Fig.4: full <= QR <= hash in loss; QR ≈ hash in params."""
+    _, full_loss = _train_dlrm(EmbeddingSpec(kind="full"))
+    qr_cfg, qr_loss = _train_dlrm(EmbeddingSpec(kind="qr", num_collisions=4))
+    hash_cfg, hash_loss = _train_dlrm(EmbeddingSpec(kind="hash", num_collisions=4))
+    # compression ~4x on the embedding tables (the paper's metric; the
+    # reduced config's MLPs dominate total params, so compare tables)
+    from repro.models.dlrm import tables_for
+    emb = lambda cfg: sum(m.num_params for m in tables_for(cfg))
+    full_emb = emb(DLRMConfig(table_sizes=SPEC.table_sizes))
+    assert emb(qr_cfg) < 0.30 * full_emb
+    assert emb(hash_cfg) <= emb(qr_cfg)
+    # quality ordering (small tolerance: stochastic training)
+    assert full_loss <= qr_loss + 0.01
+    assert qr_loss <= hash_loss + 0.005, (qr_loss, hash_loss)
+
+
+def test_lm_with_qr_vocab_trains():
+    cfg = LMConfig(name="sys", vocab=512, d_model=64, n_layers=2, n_heads=4,
+                   n_kv_heads=2, d_head=16, d_ff=128,
+                   embedding=EmbeddingSpec(kind="qr", num_collisions=4),
+                   param_dtype="float32", compute_dtype="float32", xent_chunk=16)
+    params = lm_mod.init(jax.random.PRNGKey(0), cfg)
+    opt = adam(1e-3)
+    state = init_state(params, opt)
+    step = jax.jit(make_train_step(lambda p, b: lm_mod.loss_fn(p, b, cfg), opt))
+    losses = []
+    for i in range(60):
+        state, m = step(state, lm_batch_at(0, i, 16, 32, cfg.vocab))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_train_checkpoint_serve_roundtrip(tmp_path):
+    cfg = LMConfig(name="sys2", vocab=128, d_model=32, n_layers=2, n_heads=4,
+                   n_kv_heads=2, d_head=8, d_ff=64,
+                   embedding=EmbeddingSpec(kind="qr", num_collisions=4),
+                   param_dtype="float32", compute_dtype="float32", xent_chunk=16)
+    params = lm_mod.init(jax.random.PRNGKey(0), cfg)
+    opt = adam(1e-3)
+    state = init_state(params, opt)
+    step = jax.jit(make_train_step(lambda p, b: lm_mod.loss_fn(p, b, cfg), opt))
+    for i in range(10):
+        state, _ = step(state, lm_batch_at(0, i, 8, 16, cfg.vocab))
+    ckpt.save(str(tmp_path), 10, state["params"])
+    restored, _ = ckpt.restore(str(tmp_path), 10, state["params"])
+    eng = ServeEngine(
+        prefill_fn=lambda toks, cache: lm_mod.prefill(restored, toks, cache, cfg),
+        decode_fn=lambda tok, pos, cache: lm_mod.decode_step(restored, tok, pos, cache, cfg),
+        make_cache_fn=lambda b, ml: lm_mod.make_decode_cache(cfg, b, ml),
+        batch_size=2, max_len=32)
+    uid = eng.submit([1, 2, 3, 4], max_new_tokens=4)
+    out = eng.run_until_drained()[uid].output
+    assert len(out) == 4 and all(0 <= t < cfg.vocab for t in out)
