@@ -1,0 +1,2 @@
+"""Compatibility shims for optional third-party packages the environment
+may lack (nothing here is imported by library code — only by tests)."""

@@ -1,0 +1,148 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API this repo's
+property tests use, installed by ``tests/conftest.py`` ONLY when the real
+package is missing (the CI image has it; some sandboxes don't).
+
+Supported surface: ``given``, ``settings(max_examples=, deadline=)`` and
+``strategies.integers / lists / sampled_from / data``.  Examples are drawn
+from a PRNG seeded per test name, so runs are deterministic; integer
+strategies emit their bounds as the first two examples so edge cases are
+always exercised.  No shrinking — on failure the stub re-raises with the
+generated arguments in the message.
+"""
+
+from __future__ import annotations
+
+import random as _random
+
+__all__ = ["given", "settings", "strategies", "install"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def example(self, rng, index):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng, index):
+        if index == 0:
+            return self.lo
+        if index == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+
+    def example(self, rng, index):
+        if index < len(self.seq):
+            return self.seq[index]
+        return rng.choice(self.seq)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem, min_size=0, max_size=10):
+        self.elem, self.min_size = elem, min_size
+        self.max_size = min_size + 10 if max_size is None else max_size
+
+    def example(self, rng, index):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng, 2) for _ in range(n)]
+
+
+class DataObject:
+    """Lazily draws further examples mid-test (``st.data()``)."""
+
+    def __init__(self, rng, example_index):
+        self._rng = rng
+        # bound/random schedule follows the EXAMPLE index, like top-level
+        # strategies: example 0 draws bounds' lows, example 1 highs, the
+        # rest random — a per-draw counter would pin every example's first
+        # draw to the lower bound.
+        self._index = example_index
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng, min(self._index, 2))
+
+
+class _Data(_Strategy):
+    def example(self, rng, index):
+        return DataObject(rng, index)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(seq):
+        return _SampledFrom(seq)
+
+    @staticmethod
+    def data():
+        return _Data()
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper():
+            conf = (getattr(wrapper, "_stub_settings", None)
+                    or getattr(fn, "_stub_settings", None) or {})
+            n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = _random.Random(f"repro-hypothesis-stub:{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                args = [s.example(rng, i) for s in strats]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    shown = [a if not isinstance(a, DataObject) else "<data>"
+                             for a in args]
+                    raise AssertionError(
+                        f"falsified on example #{i}: {fn.__name__}{tuple(shown)!r}"
+                    ) from e
+
+        # plain attribute copy — functools.wraps would expose fn's signature
+        # and make pytest treat the example parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        if hasattr(fn, "pytestmark"):
+            wrapper.pytestmark = fn.pytestmark
+        return wrapper
+    return deco
+
+
+def install():
+    """Register this module as ``hypothesis`` (+``hypothesis.strategies``)."""
+    import sys
+    import types
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "lists", "sampled_from", "data"):
+        setattr(st_mod, name, getattr(strategies, name))
+    mod.strategies = st_mod
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

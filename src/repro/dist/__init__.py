@@ -1,0 +1,23 @@
+"""Distribution subsystem: sharding rule engine + compressed collectives.
+
+``repro.dist.sharding`` maps parameter paths to valid ``PartitionSpec``s
+(never emitting an axis a dim cannot divide) and provides the in-model
+activation pinning helpers (``constrain`` / ``constrain_batch``).
+
+``repro.dist.compress`` implements bf16/int8 error-feedback gradient
+reduction used by the explicit data-parallel (shard_map) train step.
+"""
+
+from . import compress, sharding
+from .compress import ef_psum_grads, init_error_state, quantize_int8
+from .sharding import (INFERENCE_OVERRIDES, batch_axes, constrain,
+                       constrain_batch, fit_template, model_divides,
+                       set_batch_shard_axes, spec_for, tree_shardings)
+
+__all__ = [
+    "sharding", "compress",
+    "spec_for", "tree_shardings", "batch_axes", "constrain",
+    "constrain_batch", "set_batch_shard_axes", "model_divides",
+    "fit_template", "INFERENCE_OVERRIDES",
+    "quantize_int8", "init_error_state", "ef_psum_grads",
+]

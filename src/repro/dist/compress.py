@@ -1,0 +1,101 @@
+"""Error-feedback compressed gradient reduction (bf16 / int8).
+
+Data-parallel training all-reduces one full gradient copy per step; at
+production scale that is the wire-dominant collective.  Compressing the
+reduction to bf16 (2 B/elem) or int8 (1 B/elem + one f32 scale per leaf)
+cuts that 2–4×, and **error feedback** (Karimireddy et al., 2019) keeps
+the *time-averaged* update unbiased: the residual each compression step
+throws away is carried forward and added to the next gradient, so the sum
+of emitted gradients telescopes to the sum of true gradients.
+
+Works in two modes:
+  * ``axis_name=None`` — local compression only (single-process tests,
+    gradient-accumulation inner loops);
+  * ``axis_name="data"`` under ``shard_map`` — the compressed values are
+    what crosses the wire: ``psum`` of bf16, or of int8 widened to int32
+    with a ``pmax``-shared scale (integer accumulation → bitwise identical
+    results on every replica, which is what keeps the per-replica
+    optimizer updates in lock-step without a re-broadcast).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["quantize_int8", "init_error_state", "ef_psum_grads", "MODES"]
+
+MODES = ("none", "bf16", "int8")
+
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8 quantisation.
+
+    Returns ``(q, scale)`` with ``q`` int8 in [-127, 127] and
+    ``x ≈ q * scale``; round-to-nearest bounds the error by ``scale / 2``.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def init_error_state(grads_like):
+    """Zero residual per gradient leaf (kept in f32 regardless of grad dtype)."""
+    return jax.tree.map(lambda g: jnp.zeros(jnp.shape(g), jnp.float32), grads_like)
+
+
+def _reduce_leaf(g, e, axis_name, mode):
+    v = g.astype(jnp.float32) + e
+    if mode == "none":
+        out = lax.pmean(v, axis_name) if axis_name else v
+        return out.astype(g.dtype), jnp.zeros_like(e)
+    if mode == "bf16":
+        c = v.astype(jnp.bfloat16)
+        deq = c.astype(jnp.float32)
+        if axis_name:
+            n = lax.psum(1, axis_name)
+            out = lax.psum(c, axis_name).astype(jnp.float32) / n
+        else:
+            out = deq
+        return out.astype(g.dtype), v - deq
+    if mode == "int8":
+        if axis_name:
+            # share one scale so integer partial sums are exact + deterministic
+            amax = lax.pmax(jnp.max(jnp.abs(v)), axis_name)
+            scale = jnp.maximum(amax / 127.0, jnp.finfo(jnp.float32).tiny)
+            q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+            n = lax.psum(1, axis_name)
+            out = lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32) \
+                * scale / n
+        else:
+            q, scale = quantize_int8(v)
+            out = q.astype(jnp.float32) * scale
+        deq = q.astype(jnp.float32) * scale
+        return out.astype(g.dtype), v - deq
+    raise ValueError(f"unknown compression mode {mode!r}; expected one of {MODES}")
+
+
+def ef_psum_grads(grads, err, *, axis_name=None, mode: str = "bf16"):
+    """Compressed (mean-)reduction of a gradient tree with error feedback.
+
+    Args:
+      grads: gradient pytree.
+      err: residual pytree from the previous step (``init_error_state`` to
+        start); same treedef as ``grads``.
+      axis_name: mapped axis to reduce over (``shard_map``/``pmap`` body),
+        or ``None`` for local compression only.
+      mode: ``"none" | "bf16" | "int8"``.
+
+    Returns ``(reduced_grads, new_err)``.  The reduction is a *mean* over
+    the axis, matching a per-shard-mean loss.
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    if len(flat_e) != len(flat_g):
+        raise ValueError("error state does not match gradient tree "
+                         f"({len(flat_e)} vs {len(flat_g)} leaves)")
+    out = [_reduce_leaf(g, e, axis_name, mode) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

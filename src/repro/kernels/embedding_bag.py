@@ -29,11 +29,18 @@ __all__ = ["qr_embedding_bag"]
 def _kernel(rem_idx_ref, quo_idx_ref, mask_ref, wrem_ref, wquo_ref, out_ref, *, op):
     del rem_idx_ref, quo_idx_ref
     l = pl.program_id(1)
-    w = mask_ref[0, l].astype(wrem_ref.dtype)
+    # Combine and accumulate in f32: the running bag sum revisits the output
+    # block L times, and bf16 accumulation rounds the partial sum every step
+    # (worst-case error ~L·|sum|·2⁻⁹ — past the 3e-2 oracle tolerance at
+    # L=16, D=128).  Rows are cast on read; the pooled result is cast back
+    # to the table dtype outside the kernel.
+    w = mask_ref[0, l].astype(jnp.float32)
+    a = wrem_ref[0, :].astype(jnp.float32)
+    b = wquo_ref[0, :].astype(jnp.float32)
     if op == "mult":
-        contrib = wrem_ref[0, :] * wquo_ref[0, :] * w
+        contrib = a * b * w
     else:  # add
-        contrib = (wrem_ref[0, :] + wquo_ref[0, :]) * w
+        contrib = (a + b) * w
 
     @pl.when(l == 0)
     def _init():
@@ -68,9 +75,10 @@ def qr_embedding_bag(rem_idx, quo_idx, mask, w_rem, w_quo, *, op: str = "mult",
         ],
         out_specs=pl.BlockSpec((1, d), lambda i, j, rem, quo: (i, 0)),
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, op=op),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, d), w_rem.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
         interpret=interpret,
     )(flat_rem, flat_quo, mask.astype(w_rem.dtype), w_rem, w_quo)
+    return out.astype(w_rem.dtype)

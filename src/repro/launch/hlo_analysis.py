@@ -132,7 +132,10 @@ def _dot_flops(instr: _Instr, symtab: dict[str, str]) -> float:
     out_elems = 1
     for d in _type_dims(instr.type_str):
         out_elems *= d
-    ops = re.match(r".*?\(\s*%([\w.\-]+)", instr.line[instr.line.index(instr.opcode + "("):])
+    # operands may carry inline types ("dot(f32[64,64]{1,0} %x, ...)") — take
+    # the first %name after the opcode's paren, whatever precedes it
+    ops = re.search(r"%([\w.\-]+)",
+                    instr.line[instr.line.index(instr.opcode + "(") + len(instr.opcode) + 1:])
     lhs_name = ops.group(1) if ops else None
     k = 1
     mc = re.search(r"lhs_contracting_dims=\{([0-9, ]*)\}", instr.line)
@@ -149,11 +152,11 @@ def _conv_flops(instr: _Instr, symtab: dict[str, str]) -> float:
     out_elems = 1
     for d in _type_dims(instr.type_str):
         out_elems *= d
-    m = re.match(r".*?\(\s*%([\w.\-]+)\s*,\s*%([\w.\-]+)",
-                 instr.line[instr.line.index(instr.opcode + "("):])
-    if not m:
+    names = re.findall(r"%([\w.\-]+)",
+                       instr.line[instr.line.index(instr.opcode + "(") + len(instr.opcode) + 1:])
+    if len(names) < 2:
         return 0.0
-    rhs = symtab.get(m.group(2), "")
+    rhs = symtab.get(names[1], "")
     kdims = _type_dims(rhs)
     k = 1
     for d in kdims[:-1]:  # window dims * input features (approx; layout-dependent)
@@ -329,6 +332,8 @@ def analyze_compiled(compiled, total_devices: int = 1) -> dict:
     xla = {}
     try:
         ca = compiled.cost_analysis()
+        if isinstance(ca, list):  # older jax returns [dict] per program
+            ca = ca[0] if ca else {}
         xla = {k: float(v) for k, v in ca.items()
                if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}
     except Exception as e:  # pragma: no cover

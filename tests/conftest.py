@@ -1,0 +1,8 @@
+"""Test-session bootstrap: fall back to the in-repo hypothesis stub when the
+real package is unavailable (hermetic sandboxes; CI installs the real one)."""
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._compat import hypothesis_stub
+    hypothesis_stub.install()

@@ -73,6 +73,40 @@ def test_min_collision_free_m(size):
     assert parts[0].num_buckets + parts[1].num_buckets <= 2 * m + 1
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(3, 500), st.data())
+def test_qr_partitions_injective_for_nondivisible_sizes(size, data):
+    """Complementarity = the bucket-tuple map is injective over [0, |S|).
+
+    The fragile regime is |S| % m != 0: the last quotient bucket is ragged
+    and an off-by-one in ceil-division silently merges two categories.
+    Check injectivity directly (not just via is_complementary) on such m.
+    """
+    m = data.draw(st.integers(2, size - 1))
+    if size % m == 0:  # steer onto the ragged case; m=size-1 divides only size=2
+        m = size - 1
+    assert size % m != 0
+    parts = qr_partitions(size, m)
+    codes = np.asarray(codes_for(parts, jnp.arange(size)))
+    assert codes.shape[0] == size
+    assert len(np.unique(codes, axis=0)) == size
+    assert is_complementary(parts, size)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(5, 400), st.data())
+def test_qr_embedding_codes_injective_nondivisible_collisions(size, data):
+    """End-to-end: qr_embedding built with |S| % num_collisions != 0 still
+    assigns every category a unique (remainder, quotient) code pair."""
+    c = data.draw(st.integers(2, size - 1))
+    if size % c == 0:
+        c = size - 1
+    assert size % c != 0
+    emb = qr_embedding(size, 4, num_collisions=c, op="concat")
+    codes = np.asarray(codes_for(emb.partitions, jnp.arange(size)))
+    assert len(np.unique(codes, axis=0)) == size
+
+
 def test_paper_example_section3():
     """The concrete example from paper §3 is complementary."""
     import numpy as np
