@@ -17,7 +17,8 @@ from repro.configs.common import Shape
 from repro.train.loop import init_state, make_train_step
 
 ART = "artifacts/bench"
-TRAIN_STEPS = 400
+# CI's bench-smoke lane shrinks this via the env var; trends survive, minutes don't.
+TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "400"))
 EVAL_STEPS = 12
 BATCH = 256
 SHAPE = Shape("bench", 1, BATCH, "train")

@@ -3,29 +3,61 @@
 Prints ``name,us_per_call,derived`` CSV.  Paper experiments run on the
 seeded synthetic Criteo-shaped stream at reduced scale (CPU container);
 EXPERIMENTS.md compares the trends against the paper's absolute numbers.
+
+A section that raises is reported as a ``<section>/ERROR`` row; every
+section still runs, but the process then exits 1 so CI's bench lane
+fails instead of silently shipping a broken benchmark.  ``--only``
+filters sections by substring; ``REPRO_BENCH_INJECT_ERROR=1`` adds a
+deliberately-failing section (used to verify the CI lane actually turns
+red on errors).
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 
 
-def main() -> None:
-    sections = []
+def _injected_error():
+    raise RuntimeError("injected benchmark failure (REPRO_BENCH_INJECT_ERROR)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="run only sections whose qualified name "
+                         "(module.function) contains this substring")
+    args = ap.parse_args(argv)
+
     from . import kernels_bench, paper_tables, roofline
 
+    sections = [paper_tables.fig4, paper_tables.fig5, paper_tables.fig6,
+                paper_tables.table1, kernels_bench.rows, roofline.rows]
+    if os.environ.get("REPRO_BENCH_INJECT_ERROR"):
+        sections.append(_injected_error)
+    if args.only:
+        sections = [fn for fn in sections
+                    if args.only in f"{fn.__module__}.{fn.__name__}"]
+
+    failures: list[str] = []
     print("name,us_per_call,derived")
-    for fn in (paper_tables.fig4, paper_tables.fig5, paper_tables.fig6,
-               paper_tables.table1, kernels_bench.rows, roofline.rows):
+    for fn in sections:
         try:
             rows = fn()
         except Exception as e:  # keep the harness running; surface the error
             rows = [(f"{fn.__module__}.{fn.__name__}/ERROR", 0, repr(e)[:120])]
         for name, us, derived in rows:
+            if "/ERROR" in name:
+                failures.append(name)
             print(f"{name},{us},{derived}")
             sys.stdout.flush()
-        sections.append(fn.__name__)
+    if failures:
+        print(f"# {len(failures)} section(s) failed: {', '.join(failures)}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

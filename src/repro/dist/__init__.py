@@ -1,23 +1,34 @@
-"""Distribution subsystem: sharding rule engine + compressed collectives.
+"""Distribution subsystem: sharding rules, compression policy, collectives.
 
 ``repro.dist.sharding`` maps parameter paths to valid ``PartitionSpec``s
 (never emitting an axis a dim cannot divide) and provides the in-model
 activation pinning helpers (``constrain`` / ``constrain_batch``).
 
 ``repro.dist.compress`` implements bf16/int8 error-feedback gradient
-reduction used by the explicit data-parallel (shard_map) train step.
+reduction (true int8-on-the-wire exchanges) used by the explicit
+data-parallel and FSDP (reduce-scatter) train steps.
+
+``repro.dist.policy`` maps each gradient leaf to a compression mode via
+a path+shape rule table (int8 tables / bf16 dense / none for small or
+precision-critical leaves).
+
+``repro.dist.accounting`` prices a step's collectives in wire bytes per
+chip, cross-checkable against the HLO analyzer.
 """
 
-from . import compress, sharding
-from .compress import ef_psum_grads, init_error_state, quantize_int8
+from . import accounting, compress, policy, sharding
+from .compress import ef_psum_grads, init_error_state, quantize_int8, resolve_modes
+from .policy import AUTO, CompressionPolicy, resolve_policy
 from .sharding import (INFERENCE_OVERRIDES, batch_axes, constrain,
                        constrain_batch, fit_template, model_divides,
-                       set_batch_shard_axes, spec_for, tree_shardings)
+                       scatter_dims, set_batch_shard_axes, spec_for,
+                       tree_shardings)
 
 __all__ = [
-    "sharding", "compress",
+    "sharding", "compress", "policy", "accounting",
     "spec_for", "tree_shardings", "batch_axes", "constrain",
     "constrain_batch", "set_batch_shard_axes", "model_divides",
-    "fit_template", "INFERENCE_OVERRIDES",
-    "quantize_int8", "init_error_state", "ef_psum_grads",
+    "fit_template", "INFERENCE_OVERRIDES", "scatter_dims",
+    "quantize_int8", "init_error_state", "ef_psum_grads", "resolve_modes",
+    "AUTO", "CompressionPolicy", "resolve_policy",
 ]

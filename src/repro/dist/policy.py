@@ -1,0 +1,110 @@
+"""Per-leaf gradient-compression policy engine.
+
+PR 1's ``ef_psum_grads`` applied one compression mode to every gradient
+leaf.  At production scale that is the wrong trade everywhere at once:
+embedding-table gradients are the wire-dominant tensors and tolerate
+aggressive int8 (error feedback absorbs the quantisation), dense matmul
+gradients want bf16, and norm gains / biases / tiny leaves are not worth
+compressing at all — their bytes are noise but their precision is not.
+
+This module maps each gradient leaf (parameter path + shape) to a mode,
+in the style of ``sharding.RULES``: an ordered ``(path regex, mode)``
+table, first match wins, with a size/rank gate applied before the table
+(norms, biases, and any leaf under ``min_compress_elems`` elements get
+``small_mode`` regardless of name).  The resolved per-leaf mode pytree
+threads straight through ``compress.ef_psum_grads`` and
+``compress.init_error_state`` — error-feedback state is allocated only
+for leaves that actually compress (a zero-d placeholder otherwise).
+
+Extend by adding a ``(regex, mode)`` pair to a policy's ``rules`` —
+do **not** hardcode modes at call sites (see README "Compression policy
+& wire bytes").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Sequence
+
+from .compress import MODES
+
+__all__ = ["POLICY_RULES", "CompressionPolicy", "AUTO", "resolve_policy"]
+
+
+# Ordered (path regex, mode) table — same path idiom as sharding.RULES.
+POLICY_RULES: tuple[tuple[str, str], ...] = (
+    # Embedding / hash tables: the paper's memory-dominant tensors are also
+    # the wire-dominant gradients; int8 + error feedback.
+    (r"(^|/)(embed\w*|wte|tok_emb|tables?)(/|$)|(^|/)table_\d+($|/)", "int8"),
+    # Norm / gain / bias leaves by name (rank-2 norm scales exist in some
+    # archs, so the rank gate alone is not enough).
+    (r"(^|/)(norm\w*|ln\w*|layernorm|rmsnorm|scale|gain|bias)($|/)", "none"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    """Path+shape → compression mode.
+
+    Resolution order for ``mode_for(path, shape)``:
+      1. rank ≤ 1 or fewer than ``min_compress_elems`` elements →
+         ``small_mode`` (compressing a bias saves nothing and risks the
+         precision-critical leaves);
+      2. first matching ``(regex, mode)`` rule in ``rules``;
+      3. ``default`` (dense matmul gradients → bf16).
+    """
+
+    rules: tuple[tuple[str, str], ...] = POLICY_RULES
+    default: str = "bf16"
+    min_compress_elems: int = 2048
+    small_mode: str = "none"
+
+    def __post_init__(self):
+        for _, mode in tuple(self.rules) + (("", self.default),
+                                            ("", self.small_mode)):
+            if mode not in MODES:
+                raise ValueError(
+                    f"unknown compression mode {mode!r}; expected one of {MODES}")
+
+    def mode_for(self, path: str, shape: Sequence[int]) -> str:
+        shape = tuple(shape)
+        if len(shape) <= 1 or math.prod(shape) < self.min_compress_elems:
+            return self.small_mode
+        for pattern, mode in self.rules:
+            if re.search(pattern, path):
+                return mode
+        return self.default
+
+    def tree(self, tree_like):
+        """Pytree of mode strings matching ``tree_like``'s structure."""
+        import jax
+
+        from ..optim.optimizers import leaf_paths
+        leaves, treedef = jax.tree.flatten(tree_like)
+        paths = leaf_paths(tree_like)
+        return jax.tree.unflatten(
+            treedef, [self.mode_for(p, l.shape) for p, l in zip(paths, leaves)])
+
+    def modes(self, tree_like) -> list[str]:
+        """Flat per-leaf mode list in ``jax.tree.leaves`` order."""
+        import jax
+        return jax.tree.leaves(self.tree(tree_like),
+                               is_leaf=lambda x: isinstance(x, str))
+
+
+# The default policy: int8 tables, bf16 dense, none for norms/bias/small.
+AUTO = CompressionPolicy()
+
+
+def resolve_policy(policy) -> "CompressionPolicy | str":
+    """Accepts a mode string, ``"auto"``, or a CompressionPolicy."""
+    if isinstance(policy, CompressionPolicy):
+        return policy
+    if policy == "auto":
+        return AUTO
+    if policy in MODES:
+        return policy
+    raise ValueError(f"unknown compression policy {policy!r}; expected one of "
+                     f"{MODES + ('auto',)} or a CompressionPolicy")

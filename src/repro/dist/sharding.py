@@ -52,7 +52,7 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "RULES", "INFERENCE_OVERRIDES", "spec_for", "tree_shardings",
     "fit_template", "batch_axes", "constrain", "constrain_batch",
-    "set_batch_shard_axes", "model_divides",
+    "set_batch_shard_axes", "model_divides", "scatter_dims",
 ]
 
 
@@ -200,6 +200,26 @@ def spec_for(path: str, shape: Sequence[int], mesh,
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return fit_template(_template_for(path, len(shape), overrides), shape,
                         sizes, batch=batch_axes(mesh))
+
+
+def scatter_dims(path: str, shape: Sequence[int], mesh,
+                 axis: str = "data") -> tuple[int, ...]:
+    """Candidate reduce-scatter dims for one leaf, best first.
+
+    The dim the rule engine (``spec_for``) assigns to ``axis`` leads — the
+    gradient shard then has the same layout the FSDP param shard would —
+    followed by every other dim the axis size divides (left to right).
+    Dims the axis size does not divide are never returned, so the caller
+    can reduce-scatter any returned dim without padding.
+    """
+    shape = tuple(shape)
+    n = dict(mesh.shape).get(axis, 1)
+    spec = spec_for(path, shape, mesh)
+    preferred = [i for i, ent in enumerate(spec)
+                 if ent is not None
+                 and axis in (ent if isinstance(ent, tuple) else (ent,))]
+    order = preferred + [i for i in range(len(shape)) if i not in preferred]
+    return tuple(i for i in order if shape[i] > 0 and shape[i] % n == 0)
 
 
 def tree_shardings(structs, mesh, overrides=None):

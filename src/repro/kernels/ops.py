@@ -55,9 +55,13 @@ def qr_bag_lookup(idx, mask, w_rem, w_quo, *, op: str = "mult",
     rem, quo = _split_idx(idx, m)
     if not use_kernel or op == "concat":
         if op == "concat":
+            # pool in f32: a bf16 running sum rounds every one of the L adds
+            # (the bug the embedding-bag kernel audit caught at L=16, D=128)
             rows = jnp.concatenate([jnp.take(w_rem, rem, axis=0),
-                                    jnp.take(w_quo, quo, axis=0)], axis=-1)
-            return (rows * mask[..., None].astype(rows.dtype)).sum(axis=1)
+                                    jnp.take(w_quo, quo, axis=0)],
+                                   axis=-1).astype(jnp.float32)
+            pooled = (rows * mask[..., None].astype(jnp.float32)).sum(axis=1)
+            return pooled.astype(w_rem.dtype)
         return ref.qr_embedding_bag_ref(rem, quo, mask, w_rem, w_quo, op=op)
     interpret = (not on_tpu()) if interpret is None else interpret
     return _bag_kernel(rem, quo, mask, w_rem, w_quo, op=op, interpret=interpret)

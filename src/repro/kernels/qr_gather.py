@@ -34,12 +34,15 @@ __all__ = ["qr_gather"]
 
 def _kernel(rem_idx_ref, quo_idx_ref, wrem_ref, wquo_ref, out_ref, *, op):
     del rem_idx_ref, quo_idx_ref  # consumed by the index_maps
-    a = wrem_ref[0, :]
-    b = wquo_ref[0, :]
+    # Combine in f32 (accumulation-audit convention shared with
+    # embedding_bag.py / dot_interaction.py): bf16 rows are exact in f32,
+    # so the only rounding left is the single cast back to the table dtype.
+    a = wrem_ref[0, :].astype(jnp.float32)
+    b = wquo_ref[0, :].astype(jnp.float32)
     if op == "mult":
-        out_ref[0, :] = a * b
+        out_ref[0, :] = (a * b).astype(out_ref.dtype)
     elif op == "add":
-        out_ref[0, :] = a + b
+        out_ref[0, :] = (a + b).astype(out_ref.dtype)
     else:  # pragma: no cover - validated in ops.py
         raise ValueError(op)
 

@@ -15,11 +15,18 @@ def qr_gather_ref(rem_idx, quo_idx, w_rem, w_quo, *, op: str = "mult"):
 
 
 def qr_embedding_bag_ref(rem_idx, quo_idx, mask, w_rem, w_quo, *, op: str = "mult"):
+    # Accumulate the bag sum in f32 (accumulation-audit convention): the
+    # oracle must not inherit the bf16 running-sum rounding it exists to
+    # catch in the kernels.  Result is cast back to the table dtype.
     rows = qr_gather_ref(rem_idx, quo_idx, w_rem, w_quo, op=op)  # (B, L, D)
-    return (rows * mask[..., None].astype(rows.dtype)).sum(axis=1)
+    pooled = (rows.astype(jnp.float32)
+              * mask[..., None].astype(jnp.float32)).sum(axis=1)
+    return pooled.astype(w_rem.dtype)
 
 
 def dot_interaction_ref(x):
-    scores = jnp.einsum("bfd,bgd->bfg", x, x)
+    # f32 MXU accumulation, matching the kernel's preferred_element_type
+    scores = jnp.einsum("bfd,bgd->bfg", x, x,
+                        preferred_element_type=jnp.float32)
     i, j = np.tril_indices(x.shape[1], k=-1)
     return scores[:, i, j].astype(x.dtype)

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 __all__ = ["sgd", "adagrad", "rowwise_adagrad", "adam", "adafactor",
            "partitioned", "clip_by_global_norm", "cosine_schedule",
-           "constant_schedule", "global_norm", "Optimizer", "leaf_paths"]
+           "constant_schedule", "global_norm", "Optimizer", "leaf_paths",
+           "state_structs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,6 +211,18 @@ def leaf_paths(tree) -> list[str]:
                 return str(getattr(k, attr))
         return str(k)
     return ["/".join(keystr(k) for k in path) for path, _ in flat]
+
+
+def state_structs(optimizer: Optimizer, params_like):
+    """Optimizer-state ShapeDtypeStructs without materialising the state.
+
+    One per-param entry, in ``jax.tree.leaves`` order.  This is what the
+    FSDP planner consults to pick a scatter dim each state leaf can be
+    sliced along (row-wise Adagrad's ``(rows, 1)`` accumulator admits dim
+    0 only; Adafactor's factored stats admit none) — keeping "what shape
+    is the state" knowledge here rather than in the train loop.
+    """
+    return jax.eval_shape(optimizer.init, params_like)
 
 
 def partitioned(rules, default: Optimizer):

@@ -11,8 +11,14 @@ Properties engineered for 1000+-node runs and tested here at small scale:
   than ``watchdog_factor ×`` the running median are logged as straggler
   events (on a real cluster this feeds the reshard/evict policy; here it
   surfaces in metrics so tests can assert on it).
-* **gradient compression** — optional bf16/int8 error-feedback reduction
-  for the data-parallel axis (shard_map path; see repro.dist.compress).
+* **gradient compression** — bf16/int8 error-feedback reduction for the
+  data-parallel axis, uniform or per-leaf via a ``CompressionPolicy``
+  (shard_map path; see repro.dist.compress / repro.dist.policy).
+* **reduce-scatter FSDP grad path** — ``make_fsdp_train_step`` reduce-
+  scatters compressed gradients, applies the optimizer on each device's
+  shard (opt state sharded: per-device optimizer memory ÷ N), and
+  all-gathers the updated params.  Scatter dims come from the sharding
+  rule engine (``sharding.scatter_dims``).
 """
 
 from __future__ import annotations
@@ -28,11 +34,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..ckpt import checkpoint as ckpt
-from ..dist.compress import ef_psum_grads, init_error_state
-from ..optim.optimizers import Optimizer, clip_by_global_norm
+from ..dist.compress import (_reduce_leaf, _reduce_scatter_leaf,
+                             ef_psum_grads, init_error_state, resolve_modes)
+from ..optim.optimizers import (Optimizer, clip_by_global_norm, leaf_paths,
+                                state_structs)
 
 __all__ = ["TrainConfig", "init_state", "make_train_step", "make_dp_train_step",
-           "Trainer", "SimulatedFailure"]
+           "make_fsdp_train_step", "init_dp_state", "init_fsdp_state",
+           "fsdp_plan", "Trainer", "SimulatedFailure"]
 
 
 class SimulatedFailure(RuntimeError):
@@ -108,16 +117,26 @@ def make_train_step(loss_fn, optimizer: Optimizer, *, clip_norm=None,
     return step
 
 
+def _resolve_compress(compress):
+    """``"auto"`` / policy / mode string / per-leaf tree → ef_psum_grads mode."""
+    from ..dist.policy import resolve_policy
+    if isinstance(compress, str):
+        return resolve_policy(compress)
+    return compress
+
+
 def make_dp_train_step(loss_fn, optimizer: Optimizer, mesh, *,
-                       compress: str = "bf16", clip_norm=None, axis: str = "data"):
+                       compress="bf16", clip_norm=None, axis: str = "data"):
     """Explicit data-parallel step via shard_map with compressed grad reduction.
 
     Params/opt-state replicated; batch sharded over ``axis``; gradients
     reduced with bf16/int8 error feedback (state carried in ``state['err']``).
-    The per-replica update math is identical, so replicas stay bitwise
-    consistent without re-broadcast.
+    ``compress`` is a mode string, ``"auto"``, a ``CompressionPolicy``, or a
+    per-leaf mode pytree.  The per-replica update math is identical, so
+    replicas stay bitwise consistent without re-broadcast.
     """
     from jax.experimental.shard_map import shard_map
+    compress = _resolve_compress(compress)
 
     def _step(state, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -141,10 +160,171 @@ def make_dp_train_step(loss_fn, optimizer: Optimizer, mesh, *,
                      check_rep=False)
 
 
-def init_dp_state(params, optimizer: Optimizer):
-    grads_like = params
+def init_dp_state(params, optimizer: Optimizer, compress=None):
+    """State for ``make_dp_train_step``.  Pass the same ``compress`` policy as
+    the step so error-feedback state is allocated only for compressed leaves."""
+    err = init_error_state(
+        params, _resolve_compress(compress) if compress is not None else None)
     return {"params": params, "opt": optimizer.init(params),
-            "step": jnp.zeros((), jnp.int32), "err": init_error_state(grads_like)}
+            "step": jnp.zeros((), jnp.int32), "err": err}
+
+
+# --------------------------------------------------------------- FSDP path
+
+
+def _axis_size(mesh, axis: str) -> int:
+    return dict(mesh.shape).get(axis, 1)
+
+
+def fsdp_plan(params_like, optimizer: Optimizer, mesh, *, policy="auto",
+              axis: str = "data"):
+    """Per-leaf FSDP plan: ``[(path, shape, mode, scatter_dim | None)]``.
+
+    The scatter dim is the first ``sharding.scatter_dims`` candidate along
+    which every optimizer-state leaf of that param is sliceable (its size
+    there equals the param's — e.g. row-wise Adagrad's ``(rows, 1)``
+    accumulator admits dim 0 only, Adafactor's factored stats admit none,
+    so those leaves safely fall back to the replicated all-reduce path).
+    """
+    from ..dist.sharding import scatter_dims
+    paths = leaf_paths(params_like)
+    leaves = jax.tree.leaves(params_like)
+    modes = resolve_modes(params_like, _resolve_compress(policy))
+    opt_structs = state_structs(optimizer, params_like)
+    plan = []
+    for path, leaf, mode, entry in zip(paths, leaves, modes, opt_structs):
+        shape = tuple(leaf.shape)
+        dim = None
+        for d in scatter_dims(path, shape, mesh, axis):
+            if all(len(s.shape) > d and s.shape[d] == shape[d]
+                   for s in jax.tree.leaves(entry)):
+                dim = d
+                break
+        plan.append((path, shape, mode, dim))
+    return plan
+
+
+def make_fsdp_train_step(loss_fn, optimizer: Optimizer, mesh, params_like, *,
+                         policy="auto", clip_norm=None, axis: str = "data"):
+    """Reduce-scatter FSDP step: compressed gradients land as shards.
+
+    Per leaf (scatter dim from ``fsdp_plan``): reduce-scatter the
+    compressed gradient over ``axis``, apply the optimizer to this
+    device's param shard against its **sharded optimizer state**
+    (per-device optimizer memory ÷ N — for DLRM-scale models the
+    optimizer accumulators rival the embedding tables themselves), then
+    all-gather the updated shards back into replicated params for the
+    next forward.  Leaves with no viable scatter dim take the replicated
+    compressed all-reduce path; the two coexist in one step.
+
+    ``params_like`` (arrays or ShapeDtypeStructs) fixes leaf paths/shapes
+    at trace time.  Error-feedback residuals are genuinely per-device
+    here: state ``err`` leaves are ``(n_devices, *leaf_shape)`` arrays
+    sharded over ``axis`` (use ``init_fsdp_state``).  Supported
+    optimizers are those whose ``update_leaf`` is element-wise or
+    row-preserving along the scatter dim (SGD/Adagrad/Adam; row-wise
+    Adagrad scatters rows); Adafactor leaves fall back to all-reduce
+    automatically.
+    """
+    from jax.experimental.shard_map import shard_map
+    n = _axis_size(mesh, axis)
+    plan = fsdp_plan(params_like, optimizer, mesh, policy=policy, axis=axis)
+    treedef = jax.tree.structure(params_like)
+    opt_structs = state_structs(optimizer, params_like)
+
+    def _opt_spec(entry, dim):
+        if dim is None:
+            return jax.tree.map(lambda s: P(), entry)
+        return jax.tree.map(lambda s: P(*([None] * dim + [axis])), entry)
+
+    state_specs = {
+        "params": P(),
+        "opt": [_opt_spec(entry, dim)
+                for entry, (_, _, _, dim) in zip(opt_structs, plan)],
+        "step": P(),
+        "err": P(axis),
+    }
+
+    def _step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        idx = jax.lax.axis_index(axis)
+        flat_g = jax.tree.leaves(grads)
+        flat_p = jax.tree.leaves(state["params"])
+        flat_e = jax.tree.leaves(state["err"])
+
+        red, new_err, p_local = [], [], []
+        for g, p, e_blk, (path, shape, mode, dim) in zip(flat_g, flat_p,
+                                                         flat_e, plan):
+            e = e_blk.reshape(e_blk.shape[1:])  # drop the device dim
+            if dim is None:
+                r, ne = _reduce_leaf(g, e, axis, mode)
+                r = r.astype(jnp.float32)
+                p_loc = p
+            else:
+                r, ne = _reduce_scatter_leaf(g, e, axis, mode, dim)
+                shard = shape[dim] // n
+                p_loc = jax.lax.dynamic_slice_in_dim(p, idx * shard, shard,
+                                                     axis=dim)
+            red.append(r)
+            new_err.append(ne.reshape((1,) + ne.shape))
+            p_local.append(p_loc)
+
+        if clip_norm is not None:
+            # shard-aware global norm: scattered leaves psum their shard
+            # energy; replicated leaves are already identical everywhere.
+            local = sum(jnp.sum(jnp.square(r))
+                        for r, (_, _, _, d) in zip(red, plan) if d is not None)
+            scat = jax.lax.psum(local, axis) if not isinstance(local, int) else 0.0
+            rep = sum(jnp.sum(jnp.square(r))
+                      for r, (_, _, _, d) in zip(red, plan) if d is None)
+            gnorm = jnp.sqrt(scat + rep)
+            scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+            red = [r * scale for r in red]
+            metrics = dict(metrics, grad_norm=gnorm)
+
+        g_tree = jax.tree.unflatten(treedef, red)
+        p_tree = jax.tree.unflatten(treedef, p_local)
+        new_p_local, new_opt = optimizer.update(g_tree, state["opt"], p_tree,
+                                                state["step"])
+        new_params = []
+        for np_loc, (path, shape, mode, dim) in zip(
+                jax.tree.leaves(new_p_local), plan):
+            if dim is None:
+                new_params.append(np_loc)
+            else:
+                new_params.append(jax.lax.all_gather(np_loc, axis,
+                                                     axis=dim, tiled=True))
+        loss = jax.lax.pmean(loss, axis)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, axis), metrics)
+        new_state = {"params": jax.tree.unflatten(treedef, new_params),
+                     "opt": new_opt, "step": state["step"] + 1,
+                     "err": jax.tree.unflatten(treedef, new_err)}
+        return new_state, dict(metrics, loss=loss)
+
+    return shard_map(_step, mesh=mesh,
+                     in_specs=(state_specs, P(axis)),
+                     out_specs=(state_specs, P()),
+                     check_rep=False)
+
+
+def init_fsdp_state(params, optimizer: Optimizer, mesh, *, policy="auto",
+                    axis: str = "data"):
+    """State for ``make_fsdp_train_step``: per-device error-feedback
+    residuals (``(n, *shape)``, sharded over ``axis`` by the step's
+    in_specs), residual placeholders for uncompressed leaves."""
+    n = _axis_size(mesh, axis)
+    modes = resolve_modes(params, _resolve_compress(policy))
+    leaves, treedef = jax.tree.flatten(params)
+    # placeholder for uncompressed leaves is (n,) — a per-device 0-d
+    # residual, so the step's reshape(shape[1:]) broadcasts without
+    # promoting rank-0 gradients to (1,)
+    err = [jnp.zeros((n,) if m == "none" else (n,) + jnp.shape(g),
+                     jnp.float32)
+           for g, m in zip(leaves, modes)]
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32),
+            "err": jax.tree.unflatten(treedef, err)}
 
 
 class Trainer:

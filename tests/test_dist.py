@@ -221,6 +221,116 @@ def test_ef_residual_bounded(mode):
 
 
 @pytest.mark.slow
+def test_fsdp_matches_dp_8dev_shard_map():
+    """On a real 8-device mesh: make_fsdp_train_step must track the
+    replicated make_dp_train_step losses step for step under the same
+    policy — exactly for mode 'none' (same math, different collectives),
+    and within phase-2-compression noise for the auto policy (the DP path
+    re-compresses the reduced mean for its gather; FSDP doesn't need to).
+    The FSDP executable must actually contain scatter/gather collectives."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax
+        import numpy as np
+        from repro.core import EmbeddingSpec
+        from repro.data.criteo import CriteoSpec, batch_at
+        from repro.launch.hlo_analysis import analyze_hlo
+        from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn
+        from repro.optim.optimizers import adagrad
+        from repro.train.loop import (init_dp_state, init_fsdp_state,
+                                      make_dp_train_step, make_fsdp_train_step)
+
+        SPEC = CriteoSpec(table_sizes=(100, 5000, 33))
+        CFG = DLRMConfig(table_sizes=SPEC.table_sizes,
+                         embedding=EmbeddingSpec(kind="qr", num_collisions=4,
+                                                 threshold=50))
+        loss_fn = lambda p, b: dlrm_loss_fn(p, b, CFG)
+        mesh = jax.make_mesh((8,), ("data",))
+        opt = adagrad(1e-2)
+        params = dlrm_init(jax.random.PRNGKey(0), CFG)
+
+        s_dp = init_dp_state(params, opt, compress="none")
+        st_dp = jax.jit(make_dp_train_step(loss_fn, opt, mesh, compress="none"))
+        s_fs = init_fsdp_state(params, opt, mesh, policy="none")
+        fsdp_none = make_fsdp_train_step(loss_fn, opt, mesh, params,
+                                         policy="none")
+        st_fs = jax.jit(fsdp_none)
+        s_dpa = init_dp_state(params, opt, compress="auto")
+        st_dpa = jax.jit(make_dp_train_step(loss_fn, opt, mesh,
+                                            compress="auto"))
+        s_au = init_fsdp_state(params, opt, mesh, policy="auto")
+        st_au = jax.jit(make_fsdp_train_step(loss_fn, opt, mesh, params,
+                                             policy="auto"))
+        max_dloss = max_dauto = 0.0
+        with mesh:
+            colls = analyze_hlo(jax.jit(fsdp_none)
+                                .lower(s_fs, batch_at(0, 0, 64, SPEC))
+                                .compile().as_text(), 8).collectives
+            for i in range(8):
+                batch = batch_at(0, i, 64, SPEC)
+                s_dp, m_dp = st_dp(s_dp, batch)
+                s_fs, m_fs = st_fs(s_fs, batch)
+                s_dpa, m_dpa = st_dpa(s_dpa, batch)
+                s_au, m_au = st_au(s_au, batch)
+                max_dloss = max(max_dloss,
+                                abs(float(m_dp["loss"]) - float(m_fs["loss"])))
+                max_dauto = max(max_dauto,
+                                abs(float(m_dpa["loss"]) - float(m_au["loss"]))
+                                / max(1.0, float(m_dpa["loss"])))
+        dparam = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                     for a, b in zip(jax.tree.leaves(s_dp["params"]),
+                                     jax.tree.leaves(s_fs["params"])))
+        print(json.dumps({"max_dloss": max_dloss, "max_dparam": dparam,
+                          "max_dauto": max_dauto,
+                          "collectives": sorted(colls)}))
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH=f"{REPO}/src"),
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    # 'none' paths differ only by f32 reduction order (psum vs psum_scatter)
+    assert out["max_dloss"] <= 1e-4, out
+    assert out["max_dparam"] <= 1e-4, out
+    # same policy, different collective paths: only phase-2 re-compression
+    # of the already-reduced mean separates them (≤ one bf16 ulp / int8
+    # step of the mean per leaf per step)
+    assert out["max_dauto"] <= 0.05, out
+    # the FSDP executable genuinely reduce-scatters and gathers
+    assert "all-gather" in out["collectives"], out
+    assert ("reduce-scatter" in out["collectives"]
+            or "all-to-all" in out["collectives"]), out
+
+
+@pytest.mark.slow
+def test_dist_bench_acceptance_dp():
+    """benchmarks/dist_bench.py end to end (dp path, 4 steps): exits 0,
+    BENCH_dist.json reports int8 < 0.3× none on the HLO cross-check, and
+    accounting matches HLO within 10% for every row."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "BENCH_dist.json")
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.dist_bench", "--steps", "4",
+             "--paths", "dp", "--policies", "none,int8", "--out", out],
+            capture_output=True, text=True, cwd=REPO,
+            env=dict(os.environ, PYTHONPATH=f"{REPO}/src",
+                     XLA_FLAGS="--xla_force_host_platform_device_count=8"),
+            timeout=900)
+        assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-2000:])
+        with open(out) as f:
+            report = json.load(f)
+    assert report["checks_failed"] == [], report["checks_failed"]
+    assert report["int8_vs_none_ratio"] < 0.3, report["int8_vs_none_ratio"]
+    for row in report["rows"]:
+        rel = abs(row["wire_bytes"] - row["hlo_wire_bytes"]) \
+            / row["hlo_wire_bytes"]
+        assert rel <= 0.10, (row["path"], row["policy"], rel)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["bf16", "int8"])
 def test_ef_psum_unbiased_over_time_8dev_shard_map(mode):
     """Under a real 8-device shard_map psum with per-device-distinct

@@ -73,6 +73,67 @@ def test_concat_falls_back_to_ref():
     np.testing.assert_allclose(got[:, :8], wr[idx % 10], rtol=1e-6)
 
 
+# ----------------------------------------------------- accumulation audit
+#
+# The embedding-bag kernel audit found bf16 accumulation diverging from the
+# f32 oracle at L=16, D=128 (ROADMAP).  These tests pin the convention for
+# every pooling path: combine/accumulate in f32, round once at the end.
+# Tolerances are set so a bf16 running sum (one rounding per add, worst case
+# ~L·2⁻⁹ relative) fails while a single final cast (2⁻⁹) passes.
+
+AUDIT_B, AUDIT_L, AUDIT_D = 8, 16, 128
+
+
+def _audit_f32_oracle(idx, mask, wr, wq, op):
+    rows_r = jnp.take(wr.astype(jnp.float32), idx % wr.shape[0], axis=0)
+    rows_q = jnp.take(wq.astype(jnp.float32), idx // wr.shape[0], axis=0)
+    rows = rows_r * rows_q if op == "mult" else rows_r + rows_q
+    return (rows * mask[..., None].astype(jnp.float32)).sum(axis=1)
+
+
+@pytest.mark.parametrize("op", ["mult", "add"])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_bag_accumulates_f32_at_L16_D128(op, use_kernel):
+    m, q = 64, 8
+    wr, wq = _tables(jax.random.PRNGKey(10), m, q, AUDIT_D, jnp.bfloat16)
+    # positive rows: no cancellation, so the running sum grows and bf16
+    # accumulation error compounds past the tolerance below
+    wr, wq = jnp.abs(wr) + 0.5, jnp.abs(wq) + 0.5
+    idx = jax.random.randint(jax.random.PRNGKey(11), (AUDIT_B, AUDIT_L), 0, m * q)
+    mask = jnp.ones((AUDIT_B, AUDIT_L), jnp.bfloat16)
+    got = qr_bag_lookup(idx, mask, wr, wq, op=op, use_kernel=use_kernel)
+    want = _audit_f32_oracle(idx, mask, wr, wq, op)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               rtol=5e-3, atol=0)
+
+
+def test_bag_concat_accumulates_f32_at_L16_D128():
+    m, q = 64, 8
+    wr, wq = _tables(jax.random.PRNGKey(12), m, q, AUDIT_D, jnp.bfloat16)
+    wr, wq = jnp.abs(wr) + 0.5, jnp.abs(wq) + 0.5
+    idx = jax.random.randint(jax.random.PRNGKey(13), (AUDIT_B, AUDIT_L), 0, m * q)
+    mask = jnp.ones((AUDIT_B, AUDIT_L), jnp.bfloat16)
+    got = qr_bag_lookup(idx, mask, wr, wq, op="concat")
+    rows = jnp.concatenate([jnp.take(wr.astype(jnp.float32), idx % m, axis=0),
+                            jnp.take(wq.astype(jnp.float32), idx // m, axis=0)],
+                           axis=-1)
+    want = rows.sum(axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               rtol=5e-3, atol=0)
+
+
+def test_qr_gather_combines_f32_bf16_tables():
+    """Single-row combine: the only rounding is the final cast back to bf16."""
+    m, q = 64, 8
+    wr, wq = _tables(jax.random.PRNGKey(14), m, q, AUDIT_D, jnp.bfloat16)
+    idx = jax.random.randint(jax.random.PRNGKey(15), (AUDIT_L,), 0, m * q)
+    got = qr_lookup(idx, wr, wq, op="mult")
+    want = (jnp.take(wr.astype(jnp.float32), idx % m, axis=0)
+            * jnp.take(wq.astype(jnp.float32), idx // m, axis=0))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               rtol=5e-3, atol=1e-6)
+
+
 def test_kernel_grad_path():
     """Kernels participate in autodiff (interpret mode lowers to jnp ops)."""
     wr, wq = _tables(jax.random.PRNGKey(9), 10, 10, 8, jnp.float32)
