@@ -1,0 +1,256 @@
+"""Quantized-serving benchmark: {f32, bf16, int8} x {cache off, on}.
+
+For each rec arch (the paper's DLRM + DCN, reduced Criteo configs at the
+deployment embedding dim D=64 — at D=16 the per-row scale/zp meta alone
+is 5% of the f32 bytes and the 0.27x acceptance bar is unreachable by
+arithmetic, not by implementation), the bench:
+
+1. trains the f32 model briefly on the synthetic Criteo stream (so logits
+   carry the planted signal and the AUC proxy is meaningful);
+2. post-training-quantizes the tables (``repro.serve.quantize``) and
+   reports table bytes vs f32;
+3. scores a fixed held-out batch under each mode and reports the BCE loss
+   + ranking-AUC deltas vs f32;
+4. drives the microbatched ``RecsysEngine`` with a Zipfian multi-hot
+   request stream (the criteo generator's skew), cache off and on, and
+   reports p50/p99 wave latency, QPS, and cache hit rate.
+
+Built-in acceptance checks (any failure -> ``/ERROR`` row + exit 1, same
+contract as ``dist_bench``):
+
+* int8 table bytes <= 0.27x f32;
+* every int8 table row dequantizes within its per-row bound
+  (``|dequant - w| <= scale/2``);
+* quantized BCE loss within ``LOSS_TOL`` and AUC within ``AUC_TOL`` of
+  f32 on the fixed batch;
+* cache-on rows see hit rate > 0 under the Zipfian stream.
+
+Artifacts: ``artifacts/bench/BENCH_serve.json`` + CSV on stdout
+(``name,us_per_call,derived``).
+
+Usage::
+
+    python -m benchmarks.serve_bench --steps 30
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+ART = "artifacts/bench"
+INT8_BYTES_BAR = 0.27
+LOSS_TOL = 0.05      # abs BCE delta vs f32 on the fixed batch
+AUC_TOL = 0.02       # abs ranking-AUC delta vs f32
+SERVE_EMB_DIM = 64
+ARCHS = ("dlrm-criteo", "dcn-criteo")
+MODES = ("f32", "bf16", "int8")
+
+
+def _auc(logits, labels) -> float:
+    """Rank-based AUC (the Wilcoxon statistic) — the CTR quality proxy."""
+    import numpy as np
+    logits = np.asarray(logits, np.float64)
+    labels = np.asarray(labels) > 0.5
+    pos, neg = logits[labels], logits[~labels]
+    if not len(pos) or not len(neg):
+        return 0.5
+    ranks = np.argsort(np.argsort(np.concatenate([pos, neg]))) + 1.0
+    return (ranks[:len(pos)].sum() - len(pos) * (len(pos) + 1) / 2) \
+        / (len(pos) * len(neg))
+
+
+def _build(arch: str):
+    import jax
+
+    from repro.configs import get_arch
+    from repro.data.criteo import CriteoSpec, batch_at
+    from repro.optim import optimizers as opt
+    from repro.train.loop import init_state, make_train_step
+
+    mod = get_arch(arch)
+    cfg = dataclasses.replace(mod.config(reduced=True),
+                              emb_dim=SERVE_EMB_DIM)
+    api = mod.api(cfg)
+    spec = CriteoSpec(table_sizes=cfg.table_sizes, zipf=1.5, noise=0.5)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, spec, params, batch_at, opt, init_state, make_train_step
+
+
+def _train(api, spec, params, batch_at, init_state, make_train_step,
+           steps: int):
+    import jax
+    state = init_state(params, api.optimizer)
+    step = jax.jit(make_train_step(api.loss_fn, api.optimizer))
+    for i in range(steps):
+        state, m = step(state, batch_at(0, i, 128, spec))
+    jax.block_until_ready(m["loss"])
+    return state["params"]
+
+
+def _requests(cfg, spec, batch_at, n: int):
+    """Deterministic Zipfian multi-hot stream: bag lengths cycle 1..3, ids
+    drawn from the synthetic criteo generator (zipf-skewed per table)."""
+    import numpy as np
+    f = len(cfg.table_sizes)
+    dense = np.asarray(batch_at(0, 101, n, spec)["dense"], np.float32)
+    ids = np.stack([np.asarray(batch_at(0, 200 + j, n, spec)["sparse"])
+                    for j in range(3)])  # (3, n, F)
+    out = []
+    for r in range(n):
+        bags = [[int(ids[j, r, i]) for j in range(1 + r % 3)]
+                for i in range(f)]
+        out.append((dense[r], bags))
+    return out
+
+
+def _engine_cell(cfg, qparams, reqs, *, cache_rows: int, max_batch: int):
+    from repro.serve.cache import CacheStats, HotRowCache
+    from repro.serve.recsys import RecsysEngine
+
+    cache = HotRowCache(capacity_rows=cache_rows) if cache_rows else None
+    eng = RecsysEngine(cfg, qparams, max_batch=max_batch, cache=cache)
+    # warm pass: compiles every (B, L) bucket + miss-gather shape and fills
+    # the cache, so the timed pass measures steady-state hot traffic (the
+    # regime repeated Zipfian streams converge to), not jit compilation
+    for d, b in reqs:
+        eng.submit(d, b)
+    eng.run_until_drained()
+    eng.reset_metrics()
+    if cache is not None:
+        cache.stats = CacheStats(bytes_cached=cache.stats.bytes_cached)
+    for d, b in reqs:
+        eng.submit(d, b)
+    eng.run_until_drained()
+    return eng.metrics()
+
+
+def bench(steps: int, requests: int, max_batch: int) -> dict:
+    import numpy as np
+
+    from repro.serve.quantize import (dequantize_table, is_quantized_table,
+                                      memory_report, paths_and_leaves,
+                                      quantize_params)
+
+    rows = []
+    for arch in ARCHS:
+        cfg, api, spec, params0, batch_at, _, init_state, make_train_step = \
+            _build(arch)
+        params = _train(api, spec, params0, batch_at, init_state,
+                        make_train_step, steps)
+        fixed = batch_at(0, 9999, 512, spec)
+        base_loss = float(api.loss_fn(params, fixed)[0])
+        base_auc = _auc(api.predict(params, fixed), fixed["label"])
+        reqs = _requests(cfg, spec, batch_at, requests)
+        for mode in MODES:
+            qparams = quantize_params(params, mode=mode)
+            rep = memory_report(params, qparams)
+            loss = float(api.loss_fn(qparams, fixed)[0])
+            auc = _auc(api.predict(qparams, fixed), fixed["label"])
+            row_bound_ok, max_row_err_frac = True, 0.0
+            if mode == "int8":
+                # per-row bound: |dequant - w| <= scale/2, paired by path
+                base_by_path = dict(paths_and_leaves(params))
+                for path, qt in paths_and_leaves(qparams):
+                    if not is_quantized_table(qt):
+                        continue
+                    w = base_by_path[path]
+                    err = np.abs(np.asarray(dequantize_table(qt))
+                                 - np.asarray(w, np.float32))
+                    bound = 0.5 * np.asarray(qt["scale"], np.float32) + 1e-8
+                    frac = float((err / bound).max())
+                    max_row_err_frac = max(max_row_err_frac, frac)
+                    row_bound_ok &= bool((err <= bound).all())
+            for cache_rows in (0, 4096):
+                t0 = time.monotonic()
+                m = _engine_cell(cfg, qparams, reqs,
+                                 cache_rows=cache_rows, max_batch=max_batch)
+                rows.append({
+                    "arch": arch, "mode": mode,
+                    "cache": "on" if cache_rows else "off",
+                    "table_bytes_f32": rep["f32_table_bytes"],
+                    "table_bytes": rep["quant_table_bytes"],
+                    "bytes_ratio": rep["ratio"],
+                    "loss_f32": base_loss, "loss": loss,
+                    "auc_f32": base_auc, "auc": auc,
+                    "row_bound_ok": row_bound_ok,
+                    "max_row_err_frac": max_row_err_frac,
+                    "p50_ms": m["p50_ms"], "p99_ms": m["p99_ms"],
+                    "qps": m["qps"], "waves": m["waves"],
+                    "buckets": [list(b) for b in m["buckets"]],
+                    "hit_rate": (m.get("cache") or {}).get("hit_rate"),
+                    "cache_stats": m.get("cache"),
+                    "wall_s": round(time.monotonic() - t0, 2),
+                })
+    return {"requests": requests, "max_batch": max_batch,
+            "train_steps": steps, "emb_dim": SERVE_EMB_DIM, "rows": rows}
+
+
+def check(report: dict) -> list[tuple[str, str]]:
+    """(name, message) per failed acceptance check; empty = all green."""
+    failures = []
+    for r in report["rows"]:
+        cell = f"{r['arch']}/{r['mode']}/cache_{r['cache']}"
+        if r["mode"] == "int8":
+            if r["bytes_ratio"] > INT8_BYTES_BAR:
+                failures.append((cell, f"int8 table bytes {r['bytes_ratio']:.3f}x "
+                                       f"f32 > {INT8_BYTES_BAR}"))
+            if not r["row_bound_ok"]:
+                failures.append((cell, "per-row dequant error exceeds scale/2 "
+                                       f"(max {r['max_row_err_frac']:.3f}x bound)"))
+        if r["mode"] != "f32":
+            dl = abs(r["loss"] - r["loss_f32"])
+            da = abs(r["auc"] - r["auc_f32"])
+            if dl > LOSS_TOL:
+                failures.append((cell, f"loss delta {dl:.4f} > {LOSS_TOL}"))
+            if da > AUC_TOL:
+                failures.append((cell, f"auc delta {da:.4f} > {AUC_TOL}"))
+        if r["cache"] == "on" and not (r["hit_rate"] or 0) > 0:
+            failures.append((cell, "cache enabled but hit rate is 0 under "
+                                   "the Zipfian stream"))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("REPRO_BENCH_STEPS", 30)),
+                    help="f32 pre-training steps per arch")
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    try:
+        report = bench(args.steps, args.requests, args.max_batch)
+    except Exception as e:
+        print(f"serve_bench/ERROR,0,{repr(e)[:160]}")
+        return 1
+    for r in report["rows"]:
+        hr = "" if r["hit_rate"] is None else f";hit_rate={r['hit_rate']:.3f}"
+        print(f"serve/{r['arch']}/{r['mode']}/cache_{r['cache']},"
+              f"{r['p50_ms'] * 1e3:.0f},"
+              f"bytes_ratio={r['bytes_ratio']:.3f};qps={r['qps']:.1f};"
+              f"p99_ms={r['p99_ms']:.1f};dloss={abs(r['loss'] - r['loss_f32']):.4f}"
+              f"{hr}")
+        sys.stdout.flush()
+    failures = check(report)
+    report["checks_failed"] = [f"{n}: {m}" for n, m in failures]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    for name, msg in failures:
+        print(f"serve/check/{name}/ERROR,0,{msg}")
+    if failures:
+        print(f"# {len(failures)} serve_bench check(s) failed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

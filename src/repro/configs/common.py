@@ -66,6 +66,7 @@ class ModelApi:
     decode: Optional[Callable] = None           # (params, tokens, pos, cache)
     sub_quadratic: bool = False                 # may run long_500k
     batch_fn: Optional[Callable] = None         # (step, shape) -> real batch (smoke)
+    predict: Optional[Callable] = None          # (params, batch) -> scores (rec)
 
 
 def sds(shape, dtype):

@@ -3,7 +3,7 @@ layers, deep 512-256-64, D=16)."""
 import jax.numpy as jnp
 
 from ..data.criteo import KAGGLE_TABLE_SIZES, CriteoSpec, batch_at
-from ..models.dcn import DCNConfig, dcn_init, dcn_loss_fn
+from ..models.dcn import DCNConfig, dcn_forward, dcn_init, dcn_loss_fn
 from ..optim import optimizers as opt
 from .common import ModelApi, embedding_spec, sds
 from .dlrm_criteo import REDUCED_SIZES
@@ -37,4 +37,5 @@ def api(cfg):
         loss_fn=lambda p, b: dcn_loss_fn(p, b, cfg),
         optimizer=opt.adam(1e-3, amsgrad=True),  # AMSGrad: paper's best for mult
         train_batch=train_batch,
-        batch_fn=lambda step, shape: batch_at(0, step, shape.global_batch, spec))
+        batch_fn=lambda step, shape: batch_at(0, step, shape.global_batch, spec),
+        predict=lambda p, b: dcn_forward(p, b["dense"], b["sparse"], cfg))

@@ -3,7 +3,7 @@ top 512-256, D=16)."""
 import jax.numpy as jnp
 
 from ..data.criteo import KAGGLE_TABLE_SIZES, CriteoSpec, batch_at
-from ..models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn
+from ..models.dlrm import DLRMConfig, dlrm_forward, dlrm_init, dlrm_loss_fn
 from ..optim import optimizers as opt
 from .common import ModelApi, embedding_spec, sds
 
@@ -38,4 +38,5 @@ def api(cfg):
         loss_fn=lambda p, b: dlrm_loss_fn(p, b, cfg),
         optimizer=opt.adagrad(1e-2),  # the paper's optimizer
         train_batch=train_batch,
-        batch_fn=lambda step, shape: batch_at(0, step, shape.global_batch, spec))
+        batch_fn=lambda step, shape: batch_at(0, step, shape.global_batch, spec),
+        predict=lambda p, b: dlrm_forward(p, b["dense"], b["sparse"], cfg))

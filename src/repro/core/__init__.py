@@ -5,7 +5,9 @@ from .compositional import (
     FullEmbedding,
     HashEmbedding,
     bag_pool,
+    is_quantized_table,
     qr_embedding,
+    table_rows,
 )
 from .factory import EmbeddingSpec, make_embedding
 from .partitions import (
@@ -26,7 +28,8 @@ from .path import PathBasedEmbedding
 
 __all__ = [
     "CompositionalEmbedding", "FullEmbedding", "HashEmbedding", "bag_pool",
-    "qr_embedding", "EmbeddingSpec", "make_embedding", "Partition",
+    "qr_embedding", "table_rows", "is_quantized_table", "EmbeddingSpec",
+    "make_embedding", "Partition",
     "RemainderPartition", "QuotientPartition", "GeneralizedQRPartition",
     "ExplicitPartition", "codes_for", "crt_partitions",
     "generalized_qr_partitions", "is_complementary", "min_collision_free_m",

@@ -26,6 +26,8 @@ __all__ = [
     "CompositionalEmbedding",
     "qr_embedding",
     "bag_pool",
+    "table_rows",
+    "is_quantized_table",
 ]
 
 OPS = ("mult", "add", "concat")
@@ -33,6 +35,30 @@ OPS = ("mult", "add", "concat")
 
 def _uniform(key, shape, scale, dtype):
     return jax.random.uniform(key, shape, minval=-scale, maxval=scale, dtype=dtype)
+
+
+def is_quantized_table(leaf) -> bool:
+    """The serving stack's row-quantized table wire format (the single
+    predicate every consumer — gathers, kernels, byte accounting — uses)."""
+    return isinstance(leaf, dict) and "q" in leaf and "scale" in leaf
+
+
+def table_rows(table, idx):
+    """Gather rows from a dense *or* row-quantized table.
+
+    The serving stack (``repro.serve.quantize``) replaces table leaves with
+    ``{"q": int8 (rows, D), "scale": bf16 (rows, 1), "zp": int8 (rows, 1)}``
+    pytrees; every ``apply`` path below funnels through here, so the same
+    model code serves f32, bf16, and int8 tables.  Only the gathered rows
+    are dequantized (``scale * (q - zp)``, f32) — the full-precision table
+    never materialises, which is the serve-time memory win.
+    """
+    if is_quantized_table(table):
+        q = jnp.take(table["q"], idx, axis=0).astype(jnp.float32)
+        zp = jnp.take(table["zp"], idx, axis=0).astype(jnp.float32)
+        scale = jnp.take(table["scale"], idx, axis=0).astype(jnp.float32)
+        return (q - zp) * scale
+    return jnp.take(table, idx, axis=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +74,7 @@ class FullEmbedding:
         return {"table": _uniform(key, (self.num_categories, self.dim), scale, self.param_dtype)}
 
     def apply(self, params, idx):
-        return jnp.take(params["table"], idx, axis=0)
+        return table_rows(params["table"], idx)
 
     @property
     def num_params(self) -> int:
@@ -73,7 +99,7 @@ class HashEmbedding:
         return {"table": _uniform(key, (self.m, self.dim), scale, self.param_dtype)}
 
     def apply(self, params, idx):
-        return jnp.take(params["table"], jnp.asarray(idx) % self.m, axis=0)
+        return table_rows(params["table"], jnp.asarray(idx) % self.m)
 
     @property
     def num_params(self) -> int:
@@ -141,7 +167,7 @@ class CompositionalEmbedding:
         """Per-partition rows (the 'feature generation' mode, paper §4)."""
         idx = jnp.asarray(idx)
         return [
-            jnp.take(params[f"table_{j}"], p.bucket(idx), axis=0)
+            table_rows(params[f"table_{j}"], p.bucket(idx))
             for j, p in enumerate(self.partitions)
         ]
 
@@ -196,6 +222,9 @@ def bag_pool(module, params, idx, mask=None):
     Pallas ``embedding_bag`` kernel implements.
     """
     emb = module.apply(params, idx)  # (..., L, D)
+    # pool in f32, round once (accumulation-audit convention): a bf16
+    # running sum would round every one of the L adds
+    pooled = emb.astype(jnp.float32)
     if mask is not None:
-        emb = emb * mask[..., None].astype(emb.dtype)
-    return emb.sum(axis=-2)
+        pooled = pooled * mask[..., None].astype(jnp.float32)
+    return pooled.sum(axis=-2).astype(emb.dtype)

@@ -140,16 +140,20 @@ def dp_step_wire_bytes(params_like, policy, n: int, *,
 
 
 def fsdp_step_wire_bytes(params_like, optimizer, mesh, policy, *,
-                         axis: str = "data", scalar_allreduces: int = 0) -> dict:
+                         axis: str = "data", scalar_allreduces: int = 0,
+                         param_gather_dtype="float32") -> dict:
     """Accounted wire bytes for one ``make_fsdp_train_step`` step: compressed
-    grad reduce-scatter + f32 all-gather of every scattered param shard."""
+    grad reduce-scatter + all-gather of every scattered param shard
+    (f32, or 2 B/elem with ``param_gather_dtype="bfloat16"``)."""
     from ..train.loop import fsdp_plan
+    import jax.numpy as jnp
     n = dict(mesh.shape).get(axis, 1)
     plan = fsdp_plan(params_like, optimizer, mesh, policy=policy, axis=axis)
     scattered = [dim is not None for (_, _, _, dim) in plan]
     grads = grad_wire_bytes(params_like, policy, n, pattern="reduce_scatter",
                             scattered=scattered)
-    gather = sum(ring_all_gather_bytes(4.0 * math.prod(shape), n)
+    gbytes = float(jnp.dtype(param_gather_dtype).itemsize)
+    gather = sum(ring_all_gather_bytes(gbytes * math.prod(shape), n)
                  for (_, shape, _, dim) in plan if dim is not None)
     overhead = _scalar_overhead(n, scalar_allreduces)
     return {"grad_bytes": grads["total_bytes"], "param_gather_bytes": gather,

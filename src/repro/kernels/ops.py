@@ -18,6 +18,7 @@ from . import ref
 from .dot_interaction import dot_interaction as _dot_kernel
 from .embedding_bag import qr_embedding_bag as _bag_kernel
 from .qr_gather import qr_gather as _gather_kernel
+from .qr_gather import qr_gather_quant as _gather_quant_kernel
 
 __all__ = ["on_tpu", "qr_lookup", "qr_bag_lookup", "dlrm_interact"]
 
@@ -31,11 +32,44 @@ def _split_idx(idx, m):
     return idx % m, idx // m
 
 
+from ..core.compositional import is_quantized_table as _is_quant
+from ..core.compositional import table_rows
+
+
+def _rows(table) -> int:
+    return (table["q"] if _is_quant(table) else table).shape[0]
+
+
+def _meta(table):
+    """(rows, 2) f32 per-row (scale, zp) — the fused kernel's meta operand."""
+    return jnp.concatenate([table["scale"].astype(jnp.float32),
+                            table["zp"].astype(jnp.float32)], axis=1)
+
+
 def qr_lookup(idx, w_rem, w_quo, *, op: str = "mult", use_kernel: bool = True,
               interpret: bool | None = None):
-    """QR-trick embedding lookup for arbitrary-rank ``idx``."""
-    m = w_rem.shape[0]
+    """QR-trick embedding lookup for arbitrary-rank ``idx``.
+
+    Tables may be dense arrays or row-quantized dicts (``serve.quantize``);
+    when both are quantized the fused dequant kernel gathers the int8 rows
+    and dequantizes in VMEM during the combine.
+    """
+    m = _rows(w_rem)
     rem, quo = _split_idx(idx, m)
+    if _is_quant(w_rem) or _is_quant(w_quo):
+        if use_kernel and op in ("mult", "add") \
+                and _is_quant(w_rem) and _is_quant(w_quo):
+            interpret = (not on_tpu()) if interpret is None else interpret
+            shape = rem.shape
+            out = _gather_quant_kernel(rem.reshape(-1), quo.reshape(-1),
+                                       w_rem["q"], w_quo["q"],
+                                       _meta(w_rem), _meta(w_quo),
+                                       op=op, interpret=interpret)
+            return out.reshape(*shape, w_rem["q"].shape[1])
+        a, b = table_rows(w_rem, rem), table_rows(w_quo, quo)
+        if op == "concat":
+            return jnp.concatenate([a, b], axis=-1)
+        return a * b if op == "mult" else a + b
     if not use_kernel or op == "concat":
         out = ref.qr_gather_ref(rem, quo, w_rem, w_quo, op=op) if op != "concat" \
             else jnp.concatenate([jnp.take(w_rem, rem, axis=0),
@@ -51,8 +85,18 @@ def qr_lookup(idx, w_rem, w_quo, *, op: str = "mult", use_kernel: bool = True,
 def qr_bag_lookup(idx, mask, w_rem, w_quo, *, op: str = "mult",
                   use_kernel: bool = True, interpret: bool | None = None):
     """Sum-pooled multi-hot QR lookup: idx/mask ``(B, L)`` -> ``(B, D)``."""
-    m = w_rem.shape[0]
+    m = _rows(w_rem)
     rem, quo = _split_idx(idx, m)
+    if _is_quant(w_rem) or _is_quant(w_quo):
+        # quantized bag path: dequantized rows combined per the op, pooled
+        # in f32 (same audit convention as the dense kernel); rows come out
+        # f32 so no cast back is needed
+        a, b = table_rows(w_rem, rem), table_rows(w_quo, quo)
+        if op == "concat":
+            rows = jnp.concatenate([a, b], axis=-1)
+        else:
+            rows = a * b if op == "mult" else a + b
+        return (rows * mask[..., None].astype(jnp.float32)).sum(axis=1)
     if not use_kernel or op == "concat":
         if op == "concat":
             # pool in f32: a bf16 running sum rounds every one of the L adds

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["qr_gather"]
+__all__ = ["qr_gather", "qr_gather_quant"]
 
 
 def _kernel(rem_idx_ref, quo_idx_ref, wrem_ref, wquo_ref, out_ref, *, op):
@@ -75,3 +75,64 @@ def qr_gather(rem_idx, quo_idx, w_rem, w_quo, *, op: str = "mult",
         out_shape=jax.ShapeDtypeStruct((n, d), w_rem.dtype),
         interpret=interpret,
     )(rem_idx.astype(jnp.int32), quo_idx.astype(jnp.int32), w_rem, w_quo)
+
+
+# ------------------------------------------------------- fused dequant path
+
+
+def _quant_kernel(rem_idx_ref, quo_idx_ref, wrem_ref, wquo_ref,
+                  mrem_ref, mquo_ref, out_ref, *, op):
+    del rem_idx_ref, quo_idx_ref  # consumed by the index_maps
+    # Serving hot path: the tables stay int8 in HBM and only the two
+    # gathered rows are dequantized, *in VMEM*, during the combine — the
+    # f32 tables never exist.  meta rows are (scale, zp) per table row;
+    # all arithmetic is f32 (accumulation-audit convention), and the row
+    # is written out in f32 (quantized serving feeds f32 activations).
+    sr = mrem_ref[0, 0].astype(jnp.float32)
+    zr = mrem_ref[0, 1].astype(jnp.float32)
+    sq = mquo_ref[0, 0].astype(jnp.float32)
+    zq = mquo_ref[0, 1].astype(jnp.float32)
+    a = (wrem_ref[0, :].astype(jnp.float32) - zr) * sr
+    b = (wquo_ref[0, :].astype(jnp.float32) - zq) * sq
+    if op == "mult":
+        out_ref[0, :] = a * b
+    elif op == "add":
+        out_ref[0, :] = a + b
+    else:  # pragma: no cover - validated in ops.py
+        raise ValueError(op)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def qr_gather_quant(rem_idx, quo_idx, w_rem, w_quo, rem_meta, quo_meta, *,
+                    op: str = "mult", interpret: bool = True):
+    """Fused quantized QR gather: int8 rows in, dequant + combine in VMEM.
+
+    Args:
+      rem_idx, quo_idx: int32 ``(N,)`` bucket indices.
+      w_rem: int8 ``(m, D)``; w_quo: int8 ``(q, D)`` quantized tables.
+      rem_meta, quo_meta: f32 ``(rows, 2)`` per-row ``(scale, zp)`` —
+        callers build them from the ``serve.quantize`` table dicts (see
+        ``ops.qr_lookup``); packing both scalars into one operand keeps
+        the kernel at one extra ``(1, 2)`` DMA per table per row.
+    Returns: f32 ``(N, D)`` combined dequantized rows.
+    """
+    n = rem_idx.shape[0]
+    d = w_rem.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, rem, quo: (rem[i], 0)),
+            pl.BlockSpec((1, d), lambda i, rem, quo: (quo[i], 0)),
+            pl.BlockSpec((1, 2), lambda i, rem, quo: (rem[i], 0)),
+            pl.BlockSpec((1, 2), lambda i, rem, quo: (quo[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, rem, quo: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, op=op),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(rem_idx.astype(jnp.int32), quo_idx.astype(jnp.int32), w_rem, w_quo,
+      rem_meta.astype(jnp.float32), quo_meta.astype(jnp.float32))

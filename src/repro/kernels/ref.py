@@ -5,12 +5,27 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["qr_gather_ref", "qr_embedding_bag_ref", "dot_interaction_ref"]
+__all__ = ["qr_gather_ref", "qr_gather_quant_ref", "qr_embedding_bag_ref",
+           "dot_interaction_ref"]
 
 
 def qr_gather_ref(rem_idx, quo_idx, w_rem, w_quo, *, op: str = "mult"):
     a = jnp.take(w_rem, rem_idx, axis=0)
     b = jnp.take(w_quo, quo_idx, axis=0)
+    return a * b if op == "mult" else a + b
+
+
+def _dequant_rows_ref(w, meta, idx):
+    """f32 rows from an int8 table + per-row (scale, zp) meta."""
+    rows = jnp.take(w, idx, axis=0).astype(jnp.float32)
+    m = jnp.take(meta.astype(jnp.float32), idx, axis=0)
+    return (rows - m[..., 1:2]) * m[..., 0:1]
+
+
+def qr_gather_quant_ref(rem_idx, quo_idx, w_rem, w_quo, rem_meta, quo_meta,
+                        *, op: str = "mult"):
+    a = _dequant_rows_ref(w_rem, rem_meta, rem_idx)
+    b = _dequant_rows_ref(w_quo, quo_meta, quo_idx)
     return a * b if op == "mult" else a + b
 
 

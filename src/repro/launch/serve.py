@@ -1,9 +1,14 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Boots a reduced-config model and drives the wave-batched engine with a
-synthetic request stream (prompt lengths bucketed, greedy/temperature
-sampling).  The decode step it runs is exactly what decode_32k lowers in
-the dry-run.
+Dispatches on the arch's model *family* instead of assuming every model
+speaks the LM prefill/decode interface:
+
+* LM-family archs boot the wave-batched ``ServeEngine`` (prefill +
+  KV-cache decode — exactly what ``decode_32k`` lowers in the dry-run);
+* ``rec``-family archs (DLRM/DCN) boot the microbatched ``RecsysEngine``
+  over post-training-quantized tables (``--quantize {f32,bf16,int8}``)
+  with an optional hot-row cache (``--cache-rows N``), and report table
+  bytes, p50/p99 latency, QPS, and cache hit rate.
 """
 
 import argparse
@@ -12,34 +17,23 @@ import time
 import jax
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=96)
-    ap.add_argument("--max-new-tokens", type=int, default=12)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
-    from ..configs import get_arch
+def _serve_lm(mod, args):
+    from ..configs.common import Shape
     from ..serve.engine import ServeEngine
 
-    mod = get_arch(args.arch)
     cfg = mod.config(reduced=True)
     api = mod.api(cfg)
     if api.prefill is None or api.decode is None:
-        raise SystemExit(f"{args.arch} has no serving path")
+        raise SystemExit(f"{args.arch} has no LM serving path")
     params = api.init(jax.random.PRNGKey(0))
 
-    n_extra = len(api.prefill_inputs(
-        __import__("repro.configs.common", fromlist=["Shape"]).Shape("x", 8, 1, "prefill"))) - 1
+    n_extra = len(api.prefill_inputs(Shape("x", 8, 1, "prefill"))) - 1
 
     def prefill_fn(tokens, cache):
         if n_extra:  # multimodal stubs: zero frames/patches
             import jax.numpy as jnp
-            from ..configs.common import Shape
-            structs = api.prefill_inputs(Shape("x", tokens.shape[1], tokens.shape[0], "prefill"))
+            structs = api.prefill_inputs(Shape("x", tokens.shape[1],
+                                               tokens.shape[0], "prefill"))
             extra = tuple(jnp.zeros(s.shape, s.dtype) for s in structs[:-1])
             return api.prefill(params, *extra, tokens, cache)
         return api.prefill(params, tokens, cache)
@@ -61,6 +55,77 @@ def main():
     print(f"{args.arch}: served {len(done)} requests / {toks} tokens in {dt:.2f}s")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: {done[uid].output}")
+
+
+def _serve_rec(mod, args):
+    import numpy as np
+
+    from ..serve.cache import HotRowCache
+    from ..serve.quantize import memory_report, quantize_params
+    from ..serve.recsys import RecsysEngine
+
+    cfg = mod.config(reduced=True)
+    api = mod.api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    qparams = quantize_params(params, mode=args.quantize)
+    rep = memory_report(params, qparams)
+    print(f"{args.arch}: tables {rep['f32_table_bytes']} B f32 -> "
+          f"{rep['quant_table_bytes']} B {args.quantize} "
+          f"({rep['ratio']:.3f}x)")
+
+    cache = (HotRowCache(capacity_rows=args.cache_rows)
+             if args.cache_rows else None)
+    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    engine = RecsysEngine(cfg, qparams, max_batch=args.batch_size,
+                          cache=cache, mesh=mesh)
+
+    # Zipfian synthetic request stream (the criteo generator's skew)
+    rng = np.random.default_rng(0)
+    sizes = cfg.table_sizes
+    for i in range(args.requests):
+        dense = rng.normal(size=cfg.dense_dim)
+        bags = []
+        for s in sizes:
+            ln = int(rng.integers(1, args.max_bag + 1))
+            u = rng.random(ln)
+            bags.append(list((np.floor((u ** 1.5) * s)).astype(np.int64)))
+        engine.submit(dense, bags)
+    done = engine.run_until_drained()
+    m = engine.metrics()
+    print(f"{args.arch}: served {len(done)} requests in {m['waves']} waves | "
+          f"p50 {m['p50_ms']:.1f} ms  p99 {m['p99_ms']:.1f} ms  "
+          f"qps {m['qps']:.1f}")
+    if cache is not None:
+        print(f"  cache: hit_rate {m['cache']['hit_rate']:.3f} "
+              f"({m['cache']['hits']}/{m['cache']['lookups']}), "
+              f"{m['cache']['bytes_cached']} B resident")
+    for uid in sorted(done)[:3]:
+        print(f"  req {uid}: score {done[uid].score:+.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch-size", type=int, default=4)
+    # LM knobs
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # recsys knobs
+    ap.add_argument("--quantize", default="int8", choices=["f32", "bf16", "int8"])
+    ap.add_argument("--cache-rows", type=int, default=4096,
+                    help="hot-row cache capacity (0 disables the cache)")
+    ap.add_argument("--max-bag", type=int, default=4,
+                    help="max multi-hot ids per categorical feature")
+    args = ap.parse_args()
+
+    from ..configs import get_arch
+    mod = get_arch(args.arch)
+    if getattr(mod, "FAMILY", "lm") == "rec":
+        _serve_rec(mod, args)
+    else:
+        _serve_lm(mod, args)
 
 
 if __name__ == "__main__":

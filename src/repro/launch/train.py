@@ -24,11 +24,17 @@ def main():
     ap.add_argument("--no-reduced", dest="reduced", action="store_false")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--compress-policy", default=None,
+                    choices=["auto", "none", "bf16", "int8"],
+                    help="gradient-compression policy for the explicit "
+                         "data-parallel step (repro.dist.policy); omit for "
+                         "the plain pjit step")
     args = ap.parse_args()
 
     from ..configs import get_arch
     from ..configs.common import Shape
-    from ..train.loop import TrainConfig, Trainer, init_state, make_train_step
+    from ..train.loop import (TrainConfig, Trainer, init_dp_state, init_state,
+                              make_dp_train_step, make_train_step)
 
     mod = get_arch(args.arch)
     cfg = mod.config(reduced=args.reduced, embedding=args.embedding)
@@ -39,11 +45,27 @@ def main():
     n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     print(f"{args.arch}: {n:,} parameters (embedding={args.embedding})")
 
-    state = init_state(params, api.optimizer)
+    if args.compress_policy is not None:
+        # ROADMAP follow-up: the policy engine, selectable from the CLI.
+        # Explicit shard_map DP step over every local device; "auto" is the
+        # per-leaf rule table (int8 tables / bf16 dense / none small).
+        n_dev = jax.device_count()
+        if args.batch % n_dev:
+            raise SystemExit(f"--batch {args.batch} must be a multiple of "
+                             f"the device count {n_dev} for the dp step")
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        state = init_dp_state(params, api.optimizer,
+                              compress=args.compress_policy)
+        step = make_dp_train_step(api.loss_fn, api.optimizer, mesh,
+                                  compress=args.compress_policy)
+        print(f"dp step over {n_dev} device(s), "
+              f"compress={args.compress_policy}")
+    else:
+        state = init_state(params, api.optimizer)
+        step = make_train_step(api.loss_fn, api.optimizer)
     tc = TrainConfig(num_steps=args.steps, log_every=args.log_every,
                      ckpt_every=max(50, args.steps // 4), ckpt_dir=args.ckpt_dir)
-    trainer = Trainer(make_train_step(api.loss_fn, api.optimizer), tc,
-                      batch_at=lambda s: api.batch_fn(s, shape))
+    trainer = Trainer(step, tc, batch_at=lambda s: api.batch_fn(s, shape))
     state = trainer.resume_or(state)
     state, history = trainer.run(state)
     for step, loss in history:

@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core import CompositionalEmbedding, EmbeddingSpec
-from .dlrm import _mlp_apply, _mlp_init, tables_for
+from .dlrm import _mlp_apply, _mlp_init, embed_features, tables_for
 
-__all__ = ["DCNConfig", "dcn_init", "dcn_forward", "dcn_loss_fn"]
+__all__ = ["DCNConfig", "dcn_init", "dcn_forward", "dcn_loss_fn",
+           "dcn_forward_from_features"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,23 +63,25 @@ def dcn_init(key, cfg: DCNConfig):
     }
 
 
-def dcn_forward(params, dense_x, sparse_idx, cfg: DCNConfig):
-    modules = tables_for(cfg)
-    feats = [dense_x.astype(cfg.pdtype)]
-    for i, mod in enumerate(modules):
-        idx = sparse_idx[:, i]
-        tp = params["tables"][i]
-        if cfg.embedding.kind == "feature" and isinstance(mod, CompositionalEmbedding):
-            feats.extend(mod.partition_embeddings(tp, idx))
-        else:
-            feats.append(mod.apply(tp, idx))
-    x0 = jnp.concatenate(feats, axis=-1)
+def dcn_forward_from_features(params, dense_x, feats, cfg: DCNConfig):
+    """Cross + deep half given precomputed table features (``(B, F, D)``
+    stacked or a list of ``(B, D)``) — the serving engine's dense stage."""
+    dense_x = dense_x.astype(cfg.pdtype)
+    if not isinstance(feats, (list, tuple)):
+        feats = [feats[:, i, :] for i in range(feats.shape[1])]
+    x0 = jnp.concatenate([dense_x] + [f.astype(dense_x.dtype) for f in feats],
+                         axis=-1)
     x = x0
     for l in params["cross"]:
         x = x0 * (x @ l["w"])[:, None] + l["b"] + x
     deep = _mlp_apply(params["deep"], x0)
     out = jnp.concatenate([x, deep], axis=-1)
     return _mlp_apply(params["out"], out, final_linear=True)[:, 0]
+
+
+def dcn_forward(params, dense_x, sparse_idx, cfg: DCNConfig, mask=None):
+    feats = embed_features(params["tables"], sparse_idx, cfg, mask=mask)
+    return dcn_forward_from_features(params, dense_x, feats, cfg)
 
 
 def dcn_loss_fn(params, batch, cfg: DCNConfig):

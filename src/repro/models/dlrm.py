@@ -20,11 +20,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core import CompositionalEmbedding, EmbeddingSpec, make_embedding
+from ..core import CompositionalEmbedding, EmbeddingSpec, bag_pool, make_embedding
 from ..kernels import dlrm_interact, ops
 
 __all__ = ["DLRMConfig", "dlrm_init", "dlrm_forward", "dlrm_loss_fn",
-           "dlrm_num_params", "tables_for"]
+           "dlrm_num_params", "tables_for", "embed_features",
+           "dlrm_forward_from_features"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,26 +94,69 @@ def dlrm_init(key, cfg: DLRMConfig):
     }
 
 
-def dlrm_forward(params, dense_x, sparse_idx, cfg: DLRMConfig):
-    """dense_x: (B, 13) float; sparse_idx: (B, 26) int32 → logits (B,)."""
-    modules = tables_for(cfg)
-    z = _mlp_apply(params["bottom"], dense_x.astype(cfg.pdtype))  # (B, D)
-    feats = [z]
+def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None):
+    """Per-feature pooled embedding list — the serving stack's embed stage.
+
+    ``sparse_idx``: one-hot ``(B, F)`` or multi-hot ``(B, F, L)`` with
+    ``mask (B, F, L)`` (``bag_pool`` conventions: masked slots contribute
+    nothing, so bucket padding is exact).  Tables may be dense or
+    row-quantized (``serve.quantize``); the kernel path routes quantized
+    QR pairs through the fused int8-dequant gather.  Returns a list of
+    ``(B, D)`` features (feature mode expands per partition, one-hot only).
+    """
+    modules = tables_for(cfg) if modules is None else modules
+    multihot = sparse_idx.ndim == 3
+    use_kernel = getattr(cfg, "use_kernel", False)
+    feats = []
     for i, mod in enumerate(modules):
+        tp = table_params[i]
+        qr2 = isinstance(mod, CompositionalEmbedding) \
+            and len(mod.partitions) == 2 and mod.op in ("mult", "add")
+        if multihot:
+            idx = sparse_idx[:, i, :]
+            mk = mask[:, i, :] if mask is not None \
+                else jnp.ones(idx.shape, jnp.float32)
+            if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):
+                raise NotImplementedError(
+                    "feature-generation mode has no multi-hot serving path")
+            if use_kernel and qr2:
+                feats.append(ops.qr_bag_lookup(idx, mk, tp["table_0"],
+                                               tp["table_1"], op=mod.op))
+            else:
+                feats.append(bag_pool(mod, tp, idx, mk))
+            continue
         idx = sparse_idx[:, i]
-        tp = params["tables"][i]
         if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):
             feats.extend(mod.partition_embeddings(tp, idx))
-        elif cfg.use_kernel and isinstance(mod, CompositionalEmbedding) \
-                and len(mod.partitions) == 2 and mod.op in ("mult", "add"):
-            m = mod.partitions[0].num_buckets
-            feats.append(ops.qr_lookup(idx, tp["table_0"], tp["table_1"], op=mod.op))
+        elif use_kernel and qr2:
+            feats.append(ops.qr_lookup(idx, tp["table_0"], tp["table_1"],
+                                       op=mod.op))
         else:
             feats.append(mod.apply(tp, idx))
-    x = jnp.stack(feats, axis=1)  # (B, F, D)
+    return feats
+
+
+def dlrm_forward_from_features(params, dense_x, feats, cfg: DLRMConfig):
+    """Dense half of the model: bottom MLP + interaction + top MLP.
+
+    ``feats``: stacked table features ``(B, F-1, D)`` (or a list of
+    ``(B, D)``).  Split out from ``dlrm_forward`` so the serving engine
+    can source ``feats`` from the hot-row cache instead of the tables.
+    """
+    z = _mlp_apply(params["bottom"], dense_x.astype(cfg.pdtype))  # (B, D)
+    if isinstance(feats, (list, tuple)):
+        feats = jnp.stack(feats, axis=1)
+    x = jnp.concatenate([z[:, None, :], feats.astype(z.dtype)], axis=1)
     inter = dlrm_interact(x) if cfg.use_kernel else _interact_ref(x)
     top_in = jnp.concatenate([z, inter], axis=-1)
     return _mlp_apply(params["top"], top_in, final_linear=True)[:, 0]
+
+
+def dlrm_forward(params, dense_x, sparse_idx, cfg: DLRMConfig, mask=None):
+    """dense_x: (B, 13) float; sparse_idx: (B, 26) int32 (or (B, 26, L)
+    multi-hot with ``mask``) → logits (B,)."""
+    feats = embed_features(params["tables"], sparse_idx, cfg, mask=mask)
+    return dlrm_forward_from_features(params, dense_x, feats, cfg)
 
 
 def _interact_ref(x):

@@ -202,9 +202,11 @@ def adafactor(lr=1e-2, eps: float = 1e-30, clip_threshold: float = 1.0,
     return Optimizer(init_leaf, update_leaf)
 
 
-def leaf_paths(tree) -> list[str]:
-    """'/'-joined string path per leaf, in ``jax.tree.leaves`` order."""
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+def leaf_paths(tree, is_leaf=None) -> list[str]:
+    """'/'-joined string path per leaf, in ``jax.tree.leaves`` order.
+    ``is_leaf`` matches the ``jax.tree`` parameter (e.g. to treat the
+    serving stack's quantized-table dicts as single leaves)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
     def keystr(k):
         for attr in ("key", "idx", "name"):
             if hasattr(k, attr):

@@ -1,1 +1,22 @@
-"""Subsystem package."""
+"""Serving subsystem: wave-batched LM engine, quantized recsys engine.
+
+* ``serve.engine``   — prefill + KV-cache decode waves (LM families);
+* ``serve.quantize`` — post-training row-wise int8/bf16 table quantization;
+* ``serve.cache``    — deterministic hot-row embedding cache;
+* ``serve.recsys``   — microbatched quantized DLRM/DCN scoring engine.
+"""
+
+from .cache import CacheStats, HotRowCache
+from .engine import Request, ServeEngine
+from .quantize import (dequantize_rows, dequantize_table, is_quantized_table,
+                       memory_report, quantize_params, quantize_table,
+                       table_bytes)
+from .recsys import RecRequest, RecsysEngine
+
+__all__ = [
+    "Request", "ServeEngine",
+    "CacheStats", "HotRowCache",
+    "quantize_table", "quantize_params", "dequantize_rows",
+    "dequantize_table", "is_quantized_table", "table_bytes", "memory_report",
+    "RecRequest", "RecsysEngine",
+]

@@ -1,0 +1,176 @@
+"""Hot-row embedding cache for the recsys serving path.
+
+Zipfian category traffic (the reason the paper's thresholding works) means
+a tiny fraction of (quotient, remainder) pairs absorbs most lookups.  The
+cache keeps the *combined, dequantized* f32 rows for those pairs on the
+host: a hit skips both int8 gathers and the dequant+combine entirely; a
+miss is computed once (by the engine) and admitted.
+
+Keys are ``(table, quotient, remainder)`` triples — for non-compositional
+tables the quotient slot is 0 and the remainder is the bucket index, so
+one keyspace covers full / hash / QR tables.
+
+Design constraints (all pinned by tests):
+
+* **deterministic** — recency/admission use a logical op clock, never wall
+  time, and every tie (equal LFU frequency) breaks by least-recent-use,
+  then insertion order.  Replaying a key stream on a fresh cache
+  reproduces the exact hit/miss/evict event sequence (``replay``), which
+  is what makes cache behaviour assertable in CI.
+* **accounted** — hits, misses, evictions, insertions, and resident bytes
+  are first-class counters; the serve bench reports them per cell.
+* **bounded** — ``capacity_rows`` rows max; admission beyond that evicts
+  per ``policy`` ("lru" or "lfu").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, Iterable, Optional
+
+import numpy as np
+
+__all__ = ["CacheStats", "HotRowCache"]
+
+POLICIES = ("lru", "lfu")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    insertions: int = 0
+    bytes_cached: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "insertions": self.insertions,
+                "bytes_cached": self.bytes_cached,
+                "lookups": self.lookups, "hit_rate": self.hit_rate}
+
+
+class HotRowCache:
+    def __init__(self, capacity_rows: int = 4096, policy: str = "lfu",
+                 record_events: bool = False):
+        if policy not in POLICIES:
+            raise ValueError(f"policy={policy!r} not in {POLICIES}")
+        if capacity_rows < 1:
+            raise ValueError("capacity_rows must be >= 1")
+        self.capacity_rows = capacity_rows
+        self.policy = policy
+        self.stats = CacheStats()
+        self.record_events = record_events
+        self.events: list[tuple[str, Hashable]] = []
+        self._rows: dict[Hashable, np.ndarray] = {}
+        self._freq: dict[Hashable, int] = {}
+        self._used: dict[Hashable, int] = {}      # logical clock of last use
+        self._inserted: dict[Hashable, int] = {}  # admission order
+        self._clock = 0
+        self._admissions = 0
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __contains__(self, key) -> bool:
+        return key in self._rows
+
+    def _event(self, kind: str, key) -> None:
+        if self.record_events:
+            self.events.append((kind, key))
+
+    def get(self, key) -> Optional[np.ndarray]:
+        """Row for ``key`` or None; counts the hit/miss and bumps recency."""
+        self._clock += 1
+        row = self._rows.get(key)
+        if row is None:
+            self.stats.misses += 1
+            self._event("miss", key)
+            return None
+        self.stats.hits += 1
+        self._freq[key] += 1
+        self._used[key] = self._clock
+        self._event("hit", key)
+        return row
+
+    def _victim(self) -> Hashable:
+        if self.policy == "lru":
+            return min(self._rows, key=lambda k: self._used[k])
+        # lfu: least frequency, ties by least recent use, then admission order
+        return min(self._rows,
+                   key=lambda k: (self._freq[k], self._used[k],
+                                  self._inserted[k]))
+
+    def put(self, key, row) -> None:
+        """Admit ``row`` under ``key``, evicting per policy when full."""
+        row = np.asarray(row)
+        if key in self._rows:  # refresh in place (value update, not a use)
+            self.stats.bytes_cached += row.nbytes - self._rows[key].nbytes
+            self._rows[key] = row
+            return
+        while len(self._rows) >= self.capacity_rows:
+            victim = self._victim()
+            self.stats.bytes_cached -= self._rows[victim].nbytes
+            del self._rows[victim], self._freq[victim]
+            del self._used[victim], self._inserted[victim]
+            self.stats.evictions += 1
+            self._event("evict", victim)
+        self._clock += 1
+        self._admissions += 1
+        self._rows[key] = row
+        self._freq[key] = 1
+        self._used[key] = self._clock
+        self._inserted[key] = self._admissions
+        self.stats.insertions += 1
+        self.stats.bytes_cached += row.nbytes
+        self._event("put", key)
+
+    def get_many(self, keys: Iterable[Hashable]):
+        """Batched get: ``(found: {key: row}, missing: [unique keys])``.
+
+        ``missing`` preserves first-appearance order so the caller's
+        fill-compute (and therefore admission order) is deterministic.
+        """
+        found: dict[Hashable, np.ndarray] = {}
+        missing: list[Hashable] = []
+        seen_missing = set()
+        for key in keys:
+            if key in found:
+                # repeated key in one batch: count the extra hit, bump freq
+                self._clock += 1
+                self.stats.hits += 1
+                self._freq[key] += 1
+                self._used[key] = self._clock
+                self._event("hit", key)
+                continue
+            row = self.get(key)
+            if row is not None:
+                found[key] = row
+            elif key not in seen_missing:
+                seen_missing.add(key)
+                missing.append(key)
+        return found, missing
+
+    def replay(self, keys: Iterable[Hashable], row_bytes: int = 0
+               ) -> list[tuple[str, Hashable]]:
+        """Deterministic replay mode (tests): drive a raw key stream through
+        the full get→miss→put cycle with placeholder rows and return the
+        event log.  Two replays of the same stream on equal-config caches
+        produce identical logs — the property the cache tests assert.
+        """
+        was_recording, self.record_events = self.record_events, True
+        start = len(self.events)
+        placeholder = np.zeros((max(row_bytes, 4) // 4,), np.float32)
+        for key in keys:
+            if self.get(key) is None:
+                self.put(key, placeholder)
+        self.record_events = was_recording
+        return self.events[start:]

@@ -1,0 +1,246 @@
+"""Microbatched recsys inference engine over quantized compositional tables.
+
+The LM path serves token waves (``serve.engine``); recommendation traffic
+is different: each request is *one* scoring call carrying 13 dense floats
+plus a variable-length multi-hot id bag per categorical feature.  The
+engine:
+
+* **queues** requests and drains them FIFO in microbatches of up to
+  ``max_batch``;
+* **pads + buckets** every microbatch to a fixed shape — batch and bag
+  length each round up to a power of two — so the number of distinct
+  compiled programs is ``O(log(max_batch) · log(max_bag))``: one jit per
+  ``(B, L)`` bucket, never one per request shape.  Padded bag slots carry
+  ``mask = 0`` (``bag_pool`` conventions: they contribute exactly nothing)
+  and padded batch rows are sliced off before scores are assigned;
+* runs the **quantized forward** (int8/bf16 tables via
+  ``serve.quantize``; the fused dequant kernel when ``cfg.use_kernel``)
+  with params placed under ``dist.INFERENCE_OVERRIDES`` when a mesh is
+  given — read-only weights keep tensor-parallel placements only, no FSDP
+  gather per step;
+* optionally serves hot rows from a **host-side cache**
+  (``serve.cache.HotRowCache``): the embed stage resolves each
+  ``(table, quotient, remainder)`` pair against the cache, computes only
+  the misses (dequantizing just those rows), pools on the host, and ships
+  the pooled features to the jitted dense stage
+  (``*_forward_from_features``);
+* tracks per-wave wall time → **p50/p99 latency and QPS** via
+  ``metrics()``.
+
+Deterministic given (params, request stream): no sampling, logical-clock
+cache, fixed bucket grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import CompositionalEmbedding, HashEmbedding
+from ..models.dcn import DCNConfig, dcn_forward_from_features
+from ..models.dlrm import (DLRMConfig, dlrm_forward_from_features,
+                           embed_features, tables_for)
+from .cache import HotRowCache
+
+__all__ = ["RecRequest", "RecsysEngine"]
+
+
+@dataclasses.dataclass
+class RecRequest:
+    uid: int
+    dense: np.ndarray              # (dense_dim,)
+    bags: list[list[int]]          # one multi-hot id bag per categorical
+    score: Optional[float] = None
+    done: bool = False
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _dense_stage_for(cfg):
+    if isinstance(cfg, DLRMConfig):
+        return dlrm_forward_from_features
+    if isinstance(cfg, DCNConfig):
+        return dcn_forward_from_features
+    raise TypeError(f"no recsys serving path for config {type(cfg).__name__}")
+
+
+class RecsysEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 32,
+                 cache: Optional[HotRowCache] = None, mesh=None):
+        self.cfg = cfg
+        self.modules = tables_for(cfg)
+        if cfg.embedding.kind == "feature":
+            raise NotImplementedError(
+                "feature-generation mode has no serving path (F varies)")
+        self.cache = cache
+        self.max_batch = max_batch
+        if mesh is not None:
+            # inference placement: same rules minus FSDP (read-only weights)
+            from ..dist.sharding import INFERENCE_OVERRIDES, tree_shardings
+            params = jax.device_put(
+                params, tree_shardings(params, mesh, INFERENCE_OVERRIDES))
+        self.params = params
+        dense_stage = _dense_stage_for(cfg)
+
+        def full_fwd(params, dense, idx, mask):
+            feats = embed_features(params["tables"], idx, cfg, mask=mask)
+            return dense_stage(params, dense, feats, cfg)
+
+        self._full_fwd = jax.jit(full_fwd)
+        self._dense_fwd = jax.jit(
+            lambda params, dense, feats: dense_stage(params, dense, feats, cfg))
+        self._queue: deque[RecRequest] = deque()
+        self._next_uid = 0
+        self.completed: dict[int, RecRequest] = {}
+        self.wave_latencies_s: list[float] = []
+        self.wave_sizes: list[int] = []
+        self.buckets_seen: set[tuple[int, int]] = set()
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, dense, bags: Sequence[Sequence[int]]) -> int:
+        if len(bags) != len(self.modules):
+            raise ValueError(f"expected {len(self.modules)} feature bags, "
+                             f"got {len(bags)}")
+        if any(len(b) == 0 for b in bags):
+            raise ValueError("every feature needs at least one id")
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(RecRequest(
+            uid, np.asarray(dense, np.float32), [list(b) for b in bags]))
+        return uid
+
+    # ------------------------------------------------------------- batching
+
+    def _pad_wave(self, wave: list[RecRequest]):
+        """(dense (Bb, 13), idx (Bb, F, Lb) int32, mask (Bb, F, Lb) f32)."""
+        f = len(self.modules)
+        lb = _next_pow2(max(len(b) for r in wave for b in r.bags))
+        bb = min(_next_pow2(len(wave)), self.max_batch)
+        dense = np.zeros((bb, wave[0].dense.shape[0]), np.float32)
+        idx = np.zeros((bb, f, lb), np.int32)
+        mask = np.zeros((bb, f, lb), np.float32)
+        for b, r in enumerate(wave):
+            dense[b] = r.dense
+            for i, bag in enumerate(r.bags):
+                idx[b, i, :len(bag)] = bag
+                mask[b, i, :len(bag)] = 1.0
+        self.buckets_seen.add((bb, lb))
+        return dense, idx, mask
+
+    # ------------------------------------------------------------- cache path
+
+    def _row_key(self, feature: int, gid: int):
+        """(table, quotient, remainder) cache key for one raw id,
+        canonicalized through the module's own bucketing so ids that share
+        an embedding row share a cache entry (hash tables fold mod m)."""
+        mod = self.modules[feature]
+        if isinstance(mod, CompositionalEmbedding) and len(mod.partitions) == 2:
+            m = mod.partitions[0].num_buckets
+            return (feature, gid // m, gid % m)
+        if isinstance(mod, HashEmbedding):
+            return (feature, 0, gid % mod.m)
+        return (feature, 0, gid)
+
+    def _embed_cached(self, idx: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Pooled features (Bb, F, D) via the hot-row cache.
+
+        Cached unit: the *combined* (post-op, dequantized) f32 row per
+        (table, quotient, remainder).  Misses are computed in one gather
+        per feature over the unique missing ids and admitted.
+        """
+        bb, f, lb = idx.shape
+        d = self.cfg.emb_dim
+        feats = np.zeros((bb, f, d), np.float32)
+        for i, mod in enumerate(self.modules):
+            live = np.argwhere(mask[:, i, :] > 0)
+            gids = [int(idx[b, i, l]) for b, l in live]
+            keys = [self._row_key(i, g) for g in gids]
+            found, missing = self.cache.get_many(keys)
+            if missing:
+                miss_set = set(missing)
+                miss_gids = sorted({g for g, k in zip(gids, keys)
+                                    if k in miss_set})
+                # pad the fill-gather to a power of two: the number of
+                # distinct compiled gather shapes stays O(log max_batch)
+                # instead of one per unique miss count
+                padded = miss_gids + [miss_gids[-1]] * \
+                    (_next_pow2(len(miss_gids)) - len(miss_gids))
+                rows = np.asarray(mod.apply(
+                    self.params["tables"][i],
+                    jnp.asarray(padded, jnp.int32)), np.float32)
+                for g, row in zip(miss_gids, rows):
+                    found[self._row_key(i, g)] = row
+                    self.cache.put(self._row_key(i, g), row)
+            for (b, l), key in zip(live, keys):
+                feats[b, i] += mask[b, i, l] * found[key]
+        return feats
+
+    # ------------------------------------------------------------- execution
+
+    def step(self) -> list[RecRequest]:
+        """Score one microbatch; returns the finished requests."""
+        wave = [self._queue.popleft()
+                for _ in range(min(self.max_batch, len(self._queue)))]
+        if not wave:
+            return []
+        dense, idx, mask = self._pad_wave(wave)
+        t0 = time.monotonic()
+        if self.cache is not None:
+            feats = self._embed_cached(idx, mask)
+            logits = self._dense_fwd(self.params, jnp.asarray(dense),
+                                     jnp.asarray(feats))
+        else:
+            logits = self._full_fwd(self.params, jnp.asarray(dense),
+                                    jnp.asarray(idx), jnp.asarray(mask))
+        logits = np.asarray(jax.block_until_ready(logits), np.float32)
+        t1 = time.monotonic()
+        self._t_first = t0 if self._t_first is None else self._t_first
+        self._t_last = t1
+        self.wave_latencies_s.append(t1 - t0)
+        self.wave_sizes.append(len(wave))
+        for b, r in enumerate(wave):  # padded rows beyond len(wave) discarded
+            r.score = float(logits[b])
+            r.done = True
+            self.completed[r.uid] = r
+        return wave
+
+    def run_until_drained(self) -> dict[int, RecRequest]:
+        while self._queue:
+            self.step()
+        return self.completed
+
+    # ------------------------------------------------------------- metrics
+
+    def reset_metrics(self) -> None:
+        """Drop timing history (benches call this after bucket warm-up so
+        p50/p99 measure steady-state serving, not jit compilation)."""
+        self.wave_latencies_s = []
+        self.wave_sizes = []
+        self._t_first = self._t_last = None
+
+    def metrics(self) -> dict:
+        lat = np.asarray(self.wave_latencies_s or [0.0])
+        wall = ((self._t_last - self._t_first)
+                if self._t_first is not None else 0.0)
+        out = {
+            "requests": int(sum(self.wave_sizes)),
+            "waves": len(self.wave_sizes),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "qps": (sum(self.wave_sizes) / wall) if wall > 0 else 0.0,
+            "buckets": sorted(self.buckets_seen),
+        }
+        if self.cache is not None:
+            out["cache"] = self.cache.stats.as_dict()
+        return out

@@ -34,8 +34,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..ckpt import checkpoint as ckpt
-from ..dist.compress import (_reduce_leaf, _reduce_scatter_leaf,
-                             ef_psum_grads, init_error_state, resolve_modes)
+from ..dist.compress import (_bf16_from_wire, _bf16_to_wire, _reduce_leaf,
+                             _reduce_scatter_leaf, ef_psum_grads,
+                             init_error_state, resolve_modes)
 from ..optim.optimizers import (Optimizer, clip_by_global_norm, leaf_paths,
                                 state_structs)
 
@@ -205,7 +206,8 @@ def fsdp_plan(params_like, optimizer: Optimizer, mesh, *, policy="auto",
 
 
 def make_fsdp_train_step(loss_fn, optimizer: Optimizer, mesh, params_like, *,
-                         policy="auto", clip_norm=None, axis: str = "data"):
+                         policy="auto", clip_norm=None, axis: str = "data",
+                         param_gather_dtype="float32"):
     """Reduce-scatter FSDP step: compressed gradients land as shards.
 
     Per leaf (scatter dim from ``fsdp_plan``): reduce-scatter the
@@ -225,9 +227,22 @@ def make_fsdp_train_step(loss_fn, optimizer: Optimizer, mesh, params_like, *,
     row-preserving along the scatter dim (SGD/Adagrad/Adam; row-wise
     Adagrad scatters rows); Adafactor leaves fall back to all-reduce
     automatically.
+
+    ``param_gather_dtype="bfloat16"`` halves the param all-gather wire
+    (the FSDP step's other big collective): updated shards ride as
+    bitcast uint16 — the same trick as the compressed grad exchanges,
+    since a plain bf16 all-gather gets silently retyped f32 on backends
+    without native bf16 collectives — and each device then overwrites its
+    own slice with its exact f32 shard, so the *master* shard never loses
+    precision; only the replicated copies of **other** devices' shards
+    are bf16-rounded (one bf16 ulp on the forward, ~2^-9 relative).
     """
     from jax.experimental.shard_map import shard_map
     n = _axis_size(mesh, axis)
+    gather_bf16 = jnp.dtype(param_gather_dtype) == jnp.bfloat16
+    if not gather_bf16 and jnp.dtype(param_gather_dtype) != jnp.float32:
+        raise ValueError(f"param_gather_dtype must be float32 or bfloat16, "
+                         f"got {param_gather_dtype!r}")
     plan = fsdp_plan(params_like, optimizer, mesh, policy=policy, axis=axis)
     treedef = jax.tree.structure(params_like)
     opt_structs = state_structs(optimizer, params_like)
@@ -292,6 +307,15 @@ def make_fsdp_train_step(loss_fn, optimizer: Optimizer, mesh, params_like, *,
                 jax.tree.leaves(new_p_local), plan):
             if dim is None:
                 new_params.append(np_loc)
+            elif gather_bf16:
+                wire = jax.lax.all_gather(
+                    _bf16_to_wire(np_loc.astype(jnp.float32)), axis,
+                    axis=dim, tiled=True)
+                full = _bf16_from_wire(wire).astype(np_loc.dtype)
+                # this device's master shard stays exact
+                full = jax.lax.dynamic_update_slice_in_dim(
+                    full, np_loc, idx * (shape[dim] // n), axis=dim)
+                new_params.append(full)
             else:
                 new_params.append(jax.lax.all_gather(np_loc, axis,
                                                      axis=dim, tiled=True))

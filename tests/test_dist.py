@@ -305,6 +305,80 @@ def test_fsdp_matches_dp_8dev_shard_map():
 
 
 @pytest.mark.slow
+def test_fsdp_bf16_param_gather_halves_wire_8dev():
+    """FSDP with param_gather_dtype='bfloat16': the param all-gather rides
+    as 2 B/elem (bitcast uint16 — pinned against the compiled HLO, which
+    must agree with accounting within 10%), accounting reports exactly
+    half the f32 gather bytes, and training still tracks the replicated
+    DP step (own-shard f32 master precision; only remote shards round)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax
+        from repro.core import EmbeddingSpec
+        from repro.data.criteo import CriteoSpec, batch_at
+        from repro.dist import accounting
+        from repro.dist.policy import AUTO
+        from repro.launch.hlo_analysis import analyze_hlo
+        from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn
+        from repro.optim.optimizers import adagrad
+        from repro.train.loop import (init_dp_state, init_fsdp_state,
+                                      make_dp_train_step, make_fsdp_train_step)
+
+        SPEC = CriteoSpec(table_sizes=(100, 5000, 33))
+        CFG = DLRMConfig(table_sizes=SPEC.table_sizes,
+                         embedding=EmbeddingSpec(kind="qr", num_collisions=4,
+                                                 threshold=50))
+        loss_fn = lambda p, b: dlrm_loss_fn(p, b, CFG)
+        mesh = jax.make_mesh((8,), ("data",))
+        opt = adagrad(1e-2)
+        params = dlrm_init(jax.random.PRNGKey(0), CFG)
+
+        acct_f32 = accounting.fsdp_step_wire_bytes(
+            params, opt, mesh, AUTO, scalar_allreduces=3)
+        acct_bf = accounting.fsdp_step_wire_bytes(
+            params, opt, mesh, AUTO, scalar_allreduces=3,
+            param_gather_dtype="bfloat16")
+        step_bf = make_fsdp_train_step(loss_fn, opt, mesh, params,
+                                       policy="auto",
+                                       param_gather_dtype="bfloat16")
+        s_bf = init_fsdp_state(params, opt, mesh, policy="auto")
+        s_dp = init_dp_state(params, opt, compress="auto")
+        st_dp = jax.jit(make_dp_train_step(loss_fn, opt, mesh,
+                                           compress="auto"))
+        st_bf = jax.jit(step_bf)
+        with mesh:
+            hlo = analyze_hlo(jax.jit(step_bf)
+                              .lower(s_bf, batch_at(0, 0, 64, SPEC))
+                              .compile().as_text(), 8)
+            max_d = 0.0
+            for i in range(6):
+                b = batch_at(0, i, 64, SPEC)
+                s_dp, m1 = st_dp(s_dp, b)
+                s_bf, m2 = st_bf(s_bf, b)
+                max_d = max(max_d, abs(float(m1["loss"]) - float(m2["loss"]))
+                            / max(1.0, float(m1["loss"])))
+        print(json.dumps({
+            "gather_f32": acct_f32["param_gather_bytes"],
+            "gather_bf16": acct_bf["param_gather_bytes"],
+            "acct_total": acct_bf["total_bytes"],
+            "hlo_total": hlo.collective_bytes,
+            "max_rel_dloss": max_d}))
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH=f"{REPO}/src"),
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["gather_bf16"] == pytest.approx(out["gather_f32"] / 2)
+    rel = abs(out["acct_total"] - out["hlo_total"]) / out["hlo_total"]
+    assert rel <= 0.10, out
+    # bf16-rounded remote shards perturb the forward by ~one bf16 ulp
+    assert out["max_rel_dloss"] <= 0.05, out
+
+
+@pytest.mark.slow
 def test_dist_bench_acceptance_dp():
     """benchmarks/dist_bench.py end to end (dp path, 4 steps): exits 0,
     BENCH_dist.json reports int8 < 0.3× none on the HLO cross-check, and
