@@ -1,0 +1,192 @@
+"""Memory-planner benchmark: budget sweep vs the uniform-hashing control.
+
+For each rec arch (the paper's DLRM + DCN, reduced Criteo configs) the
+bench streams per-feature frequency stats from the synthetic Criteo
+generator, then solves the budgeted allocation at
+``{0.05, 0.125, 0.25, 0.5}×`` of the all-full-table bytes and compares
+the planner against a uniform-hashing baseline *at the same budget and
+under the same byte accounting*.
+
+Built-in acceptance checks (any failure -> ``/ERROR`` row + exit 1, the
+``dist_bench``/``serve_bench`` contract):
+
+* **budget respected** — planned bytes <= budget at every cell, exactly
+  (the plan's claimed bytes must also equal ``num_params x 4`` of the
+  modules ``make_embedding`` actually builds from it — cost-model drift
+  fails the bench, not just a test);
+* **beats uniform hashing** — the planner's frequency-weighted quality
+  proxy is *strictly* above the uniform-hash control at every budget;
+* **complementary** — every compositional choice (qr / mixed_radix)
+  passes ``core.partitions.is_complementary`` (brute force; reduced
+  sizes are all below the check cap);
+* **monotone** — plan quality never decreases as the budget grows.
+
+Artifacts: ``artifacts/bench/BENCH_plan.json`` (+ each solved plan under
+``artifacts/plans/``) and CSV on stdout (``name,us_per_call,derived``).
+
+Usage::
+
+    python -m benchmarks.plan_bench --stats-batches 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ART = "artifacts/bench"
+ARCHS = ("dlrm-criteo", "dcn-criteo")
+BUDGET_FRACS = (0.05, 0.125, 0.25, 0.5)
+
+
+def _stats_for(arch: str, num_batches: int, batch_size: int):
+    from repro.configs import get_arch
+    from repro.data.criteo import CriteoSpec
+    from repro.plan import stats_from_criteo
+
+    cfg = get_arch(arch).config(reduced=True)
+    spec = CriteoSpec(table_sizes=cfg.table_sizes, zipf=1.5, noise=0.5)
+    return cfg, stats_from_criteo(spec, num_batches=num_batches,
+                                  batch_size=batch_size)
+
+
+def _plan_cell(arch: str, cfg, stats, frac: float, save: bool) -> dict:
+    from repro.core import make_embedding
+    from repro.plan import (build_plan, full_table_bytes, plan_path,
+                            uniform_hash_plan)
+
+    dim = cfg.emb_dim
+    full = full_table_bytes(cfg.table_sizes, dim)
+    budget = int(full * frac)
+    uniform = uniform_hash_plan(stats, dim, budget, arch=arch)
+    t0 = time.monotonic()
+    plan = build_plan(stats, dim, budget, arch=arch, baseline=uniform)
+    solve_s = time.monotonic() - t0
+    if save:
+        plan.save(plan_path(arch, budget))
+
+    # executable round-trip: the bytes the plan claims are the bytes the
+    # factory builds (f32 train domain: 4 B per parameter)
+    built_params = sum(
+        make_embedding(n, dim, plan, feature=i).num_params
+        for i, n in enumerate(cfg.table_sizes))
+    comp_ok = all(t.complementary is True for t in plan.tables
+                  if t.kind in ("qr", "mixed_radix", "crt"))
+    return {
+        "arch": arch, "budget_frac": frac, "budget_bytes": budget,
+        "full_bytes": full, "plan_bytes": plan.total_bytes,
+        "built_bytes": built_params * 4,
+        "uniform_bytes": uniform.total_bytes,
+        "quality": plan.quality, "uniform_quality": uniform.quality,
+        "kinds": plan.summary()["kinds"],
+        "compositional_complementary": comp_ok,
+        "solve_ms": round(solve_s * 1e3, 2),
+    }
+
+
+def bench(stats_batches: int, batch_size: int, save_plans: bool) -> dict:
+    rows = []
+    for arch in ARCHS:
+        cfg, stats = _stats_for(arch, stats_batches, batch_size)
+        for frac in BUDGET_FRACS:
+            rows.append(_plan_cell(arch, cfg, stats, frac, save_plans))
+    return {"archs": list(ARCHS), "budget_fracs": list(BUDGET_FRACS),
+            "stats_batches": stats_batches, "batch_size": batch_size,
+            "rows": rows}
+
+
+def check(report: dict) -> list[tuple[str, str]]:
+    """(name, message) per failed acceptance check; empty = all green."""
+    failures = []
+    by_arch: dict[str, list] = {}
+    for r in report["rows"]:
+        cell = f"{r['arch']}/b{r['budget_frac']:g}"
+        by_arch.setdefault(r["arch"], []).append(r)
+        if r["plan_bytes"] > r["budget_bytes"]:
+            failures.append((cell, f"planned bytes {r['plan_bytes']} exceed "
+                                   f"budget {r['budget_bytes']}"))
+        if r["built_bytes"] != r["plan_bytes"]:
+            failures.append((cell, f"cost-model drift: plan claims "
+                                   f"{r['plan_bytes']} B, make_embedding "
+                                   f"builds {r['built_bytes']} B"))
+        if not r["quality"] > r["uniform_quality"]:
+            failures.append((cell, f"plan quality {r['quality']:.6f} does not "
+                                   f"beat uniform hashing "
+                                   f"{r['uniform_quality']:.6f}"))
+        if not r["compositional_complementary"]:
+            failures.append((cell, "a compositional choice failed "
+                                   "is_complementary"))
+    for arch, cells in by_arch.items():
+        cells = sorted(cells, key=lambda r: r["budget_frac"])
+        for a, b in zip(cells, cells[1:]):
+            if b["quality"] < a["quality"] - 1e-12:
+                failures.append(
+                    (f"{arch}/b{b['budget_frac']:g}",
+                     f"quality {b['quality']:.6f} dropped below the "
+                     f"smaller budget's {a['quality']:.6f}"))
+    return failures
+
+
+def rows():
+    """Fast planner section for ``benchmarks.run``: one arch, two budgets,
+    a short stats stream — catches wiring rot, not statistics."""
+    out = []
+    cfg, stats = _stats_for("dlrm-criteo", num_batches=6, batch_size=256)
+    for frac in (0.05, 0.25):
+        r = _plan_cell("dlrm-criteo", cfg, stats, frac, save=False)
+        ok = (r["plan_bytes"] <= r["budget_bytes"]
+              and r["quality"] > r["uniform_quality"]
+              and r["compositional_complementary"])
+        name = f"plan/{r['arch']}/b{frac:g}" + ("" if ok else "/ERROR")
+        out.append((name, r["solve_ms"] * 1e3,
+                    f"quality={r['quality']:.4f};"
+                    f"uniform={r['uniform_quality']:.4f};"
+                    f"bytes={r['plan_bytes']}/{r['budget_bytes']}"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stats-batches", type=int,
+                    default=int(os.environ.get("REPRO_BENCH_STATS_BATCHES", 24)),
+                    help="synthetic Criteo batches streamed into the "
+                         "frequency histograms")
+    ap.add_argument("--batch-size", type=int, default=512)
+    ap.add_argument("--no-save-plans", dest="save_plans",
+                    action="store_false", default=True,
+                    help="skip writing the solved plans to artifacts/plans/")
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_plan.json"))
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    try:
+        report = bench(args.stats_batches, args.batch_size, args.save_plans)
+    except Exception as e:
+        print(f"plan_bench/ERROR,0,{repr(e)[:160]}")
+        return 1
+    for r in report["rows"]:
+        print(f"plan/{r['arch']}/b{r['budget_frac']:g},"
+              f"{r['solve_ms'] * 1e3:.0f},"
+              f"quality={r['quality']:.6f};"
+              f"uniform={r['uniform_quality']:.6f};"
+              f"bytes={r['plan_bytes']}/{r['budget_bytes']};"
+              f"kinds={'+'.join(f'{k}:{v}' for k, v in sorted(r['kinds'].items()))}")
+        sys.stdout.flush()
+    failures = check(report)
+    report["checks_failed"] = [f"{n}: {m}" for n, m in failures]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    for name, msg in failures:
+        print(f"plan/check/{name}/ERROR,0,{msg}")
+    if failures:
+        print(f"# {len(failures)} plan_bench check(s) failed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,10 +30,11 @@ def main(argv=None) -> int:
                          "(module.function) contains this substring")
     args = ap.parse_args(argv)
 
-    from . import kernels_bench, paper_tables, roofline
+    from . import kernels_bench, paper_tables, plan_bench, roofline
 
     sections = [paper_tables.fig4, paper_tables.fig5, paper_tables.fig6,
-                paper_tables.table1, kernels_bench.rows, roofline.rows]
+                paper_tables.table1, kernels_bench.rows, roofline.rows,
+                plan_bench.rows]
     if os.environ.get("REPRO_BENCH_INJECT_ERROR"):
         sections.append(_injected_error)
     if args.only:

@@ -1,7 +1,16 @@
-"""Compression-vs-quality sweep (the paper's core trade-off, Fig. 5).
+"""Budget → plan → model: the planner-driven compression sweep.
 
-Trains a DLRM at several collision counts and operations, printing the
-params/loss frontier.  A miniature of benchmarks/paper_tables.fig5.
+The paper's Fig. 5 trade-off (params vs quality), but instead of
+hand-enumerating per-feature specs, each point asks ``repro.plan`` for
+the best allocation at a byte budget: frequency stats are streamed from
+the synthetic Criteo generator, the Lagrangian-greedy knapsack picks
+full / hash / QR / mixed-radix per feature, and the resulting
+``MemoryPlan`` drops straight into ``DLRMConfig.embedding``.
+
+Each budget prints the planner's analytic quality proxy next to the
+*trained* loss of (a) the planned model and (b) the uniform-hashing
+control at the same budget — the proxy's job is to rank allocations
+without training, so the two orderings should agree.
 
 Run: PYTHONPATH=src python examples/compression_sweep.py
 """
@@ -9,18 +18,21 @@ Run: PYTHONPATH=src python examples/compression_sweep.py
 import jax
 import numpy as np
 
-from repro.core import EmbeddingSpec
 from repro.data.criteo import CriteoSpec, batch_at
 from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn, dlrm_num_params
 from repro.optim.optimizers import adagrad
+from repro.plan import (build_plan, full_table_bytes, stats_from_criteo,
+                        uniform_hash_plan)
 from repro.train.loop import init_state, make_train_step
 
 SIZES = (1000, 200, 50000, 12000, 31, 24, 12517, 633, 3, 931)
 SPEC = CriteoSpec(table_sizes=SIZES, zipf=1.5, noise=0.5)
+DIM = 16
+BUDGET_FRACS = (0.05, 0.125, 0.25, 0.5)
 
 
-def run(embedding: EmbeddingSpec, steps=250, batch=256):
-    cfg = DLRMConfig(table_sizes=SIZES, embedding=embedding)
+def train(embedding, steps=250, batch=256):
+    cfg = DLRMConfig(table_sizes=SIZES, emb_dim=DIM, embedding=embedding)
     params = dlrm_init(jax.random.PRNGKey(0), cfg)
     opt = adagrad(1e-2)
     state = init_state(params, opt)
@@ -34,14 +46,26 @@ def run(embedding: EmbeddingSpec, steps=250, batch=256):
 
 
 def main():
-    n0, l0 = run(EmbeddingSpec(kind="full"))
-    print(f"{'treatment':22s} {'params':>10s} {'ratio':>6s} {'loss':>8s}")
-    print(f"{'full':22s} {n0:>10,} {1.0:>6.1f} {l0:>8.4f}")
-    for c in (2, 4, 16):
-        for kind, op in (("hash", "mult"), ("qr", "mult"), ("qr", "concat")):
-            n, l = run(EmbeddingSpec(kind=kind, num_collisions=c, op=op))
-            name = f"{kind}-{op}/c{c}" if kind == "qr" else f"hash/c{c}"
-            print(f"{name:22s} {n:>10,} {n0 / n:>6.1f} {l:>8.4f}")
+    from repro.core import EmbeddingSpec
+    stats = stats_from_criteo(SPEC, num_batches=16, batch_size=512)
+    full = full_table_bytes(SIZES, DIM)
+    n0, l0 = train(EmbeddingSpec(kind="full"))
+    print(f"{'treatment':26s} {'params':>10s} {'ratio':>6s} "
+          f"{'proxy':>8s} {'loss':>8s}")
+    print(f"{'full':26s} {n0:>10,} {1.0:>6.1f} {1.0:>8.4f} {l0:>8.4f}")
+    for frac in BUDGET_FRACS:
+        budget = int(full * frac)
+        uni = uniform_hash_plan(stats, DIM, budget, arch="dlrm-criteo")
+        plan = build_plan(stats, DIM, budget, arch="dlrm-criteo",
+                          baseline=uni)
+        n_p, l_p = train(plan)
+        n_u, l_u = train(uni)
+        kinds = "+".join(f"{k}:{v}" for k, v in
+                         sorted(plan.summary()["kinds"].items()))
+        print(f"{'plan/' + f'{frac:g}x':26s} {n_p:>10,} {n0 / n_p:>6.1f} "
+              f"{plan.quality:>8.4f} {l_p:>8.4f}   [{kinds}]")
+        print(f"{'uniform-hash/' + f'{frac:g}x':26s} {n_u:>10,} "
+              f"{n0 / n_u:>6.1f} {uni.quality:>8.4f} {l_u:>8.4f}")
 
 
 if __name__ == "__main__":

@@ -31,7 +31,8 @@ from ..optim.optimizers import leaf_paths
 from ..train.loop import make_train_step
 
 __all__ = ["SHAPES", "Shape", "ModelApi", "lowerables", "sds", "cache_spec",
-           "batch_sharding", "param_structs", "state_structs"]
+           "batch_sharding", "param_structs", "state_structs",
+           "embedding_spec", "resolve_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -388,3 +389,14 @@ def embedding_spec(embedding: str, num_collisions: int = 4):
     from ..core import EmbeddingSpec, factory
     kind = embedding if embedding in factory.KINDS else "qr"
     return EmbeddingSpec(kind=kind, num_collisions=num_collisions, op="mult")
+
+
+def resolve_plan(plan, table_sizes):
+    """A ``repro.plan.MemoryPlan`` (or a path to its JSON artifact) ready
+    to serve as a config's ``embedding``: loads if needed and validates
+    that it was solved for exactly these table sizes."""
+    from ..plan import MemoryPlan
+    if isinstance(plan, (str, bytes)):
+        plan = MemoryPlan.load(plan)
+    plan.validate_sizes(table_sizes)
+    return plan

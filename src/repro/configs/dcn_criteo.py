@@ -5,19 +5,24 @@ import jax.numpy as jnp
 from ..data.criteo import KAGGLE_TABLE_SIZES, CriteoSpec, batch_at
 from ..models.dcn import DCNConfig, dcn_forward, dcn_init, dcn_loss_fn
 from ..optim import optimizers as opt
-from .common import ModelApi, embedding_spec, sds
+from .common import ModelApi, embedding_spec, resolve_plan, sds
 from .dlrm_criteo import REDUCED_SIZES
 
 ARCH, FAMILY, PARAMS_B = "dcn-criteo", "rec", 0.54
 
 
 def config(reduced: bool = False, embedding: str = "qr", num_collisions: int = 4,
-           threshold: int = 0, op: str = "mult", path_hidden: int = 64):
+           threshold: int = 0, op: str = "mult", path_hidden: int = 64,
+           plan=None):
+    sizes = REDUCED_SIZES if reduced else KAGGLE_TABLE_SIZES
+    if plan is not None:
+        emb = resolve_plan(plan, sizes)
+        return DCNConfig(name=ARCH, table_sizes=sizes, emb_dim=emb.emb_dim,
+                         cross_layers=6, deep_mlp=(512, 256, 64), embedding=emb)
     emb = embedding_spec(embedding, num_collisions)
     import dataclasses
     emb = dataclasses.replace(emb, threshold=threshold, op=op,
                               path_hidden=path_hidden)
-    sizes = REDUCED_SIZES if reduced else KAGGLE_TABLE_SIZES
     return DCNConfig(name=ARCH, table_sizes=sizes, emb_dim=16, cross_layers=6,
                      deep_mlp=(512, 256, 64), embedding=emb)
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 from ..data.criteo import KAGGLE_TABLE_SIZES, CriteoSpec, batch_at
 from ..models.dlrm import DLRMConfig, dlrm_forward, dlrm_init, dlrm_loss_fn
 from ..optim import optimizers as opt
-from .common import ModelApi, embedding_spec, sds
+from .common import ModelApi, embedding_spec, resolve_plan, sds
 
 ARCH, FAMILY, PARAMS_B = "dlrm-criteo", "rec", 0.54
 
@@ -13,12 +13,20 @@ REDUCED_SIZES = (1000, 200, 50000, 12000, 31, 24, 12517, 633, 3, 931)
 
 
 def config(reduced: bool = False, embedding: str = "qr", num_collisions: int = 4,
-           threshold: int = 0, op: str = "mult", path_hidden: int = 64):
+           threshold: int = 0, op: str = "mult", path_hidden: int = 64,
+           plan=None):
+    sizes = REDUCED_SIZES if reduced else KAGGLE_TABLE_SIZES
+    if plan is not None:
+        # a MemoryPlan (or a path to one) overrides the uniform spec with
+        # the planner's per-feature choices
+        emb = resolve_plan(plan, sizes)
+        return DLRMConfig(name=ARCH, table_sizes=sizes, emb_dim=emb.emb_dim,
+                          bottom_mlp=(512, 256, 64), top_mlp=(512, 256),
+                          embedding=emb)
     emb = embedding_spec(embedding, num_collisions)
     import dataclasses
     emb = dataclasses.replace(emb, threshold=threshold, op=op,
                               path_hidden=path_hidden)
-    sizes = REDUCED_SIZES if reduced else KAGGLE_TABLE_SIZES
     return DLRMConfig(name=ARCH, table_sizes=sizes, emb_dim=16,
                       bottom_mlp=(512, 256, 64), top_mlp=(512, 256), embedding=emb)
 

@@ -5,6 +5,12 @@
 factory applies the paper's §5.4 thresholding rule: tables with at most
 ``threshold`` categories keep a full table; only larger tables are
 compressed.
+
+The from-plan path: ``spec`` may also be a ``repro.plan.MemoryPlan``
+(duck-typed via ``spec_for`` — no import cycle), in which case ``feature``
+selects the per-feature spec the planner solved for; the plan validates
+cardinality and embedding dim so a stale plan fails loudly instead of
+silently building un-scored tables.
 """
 
 from __future__ import annotations
@@ -37,8 +43,18 @@ class EmbeddingSpec:
 
 
 def make_embedding(num_categories: int, dim: int, spec: EmbeddingSpec,
-                   param_dtype=jnp.float32):
-    """Build the embedding module for one categorical feature/table."""
+                   param_dtype=jnp.float32, feature: int | None = None):
+    """Build the embedding module for one categorical feature/table.
+
+    ``spec`` is an ``EmbeddingSpec`` or a ``repro.plan.MemoryPlan``; a plan
+    requires ``feature`` (the categorical feature index) to pick the table
+    choice the planner made for it.
+    """
+    if hasattr(spec, "spec_for"):  # MemoryPlan: resolve the per-feature spec
+        if feature is None:
+            raise ValueError("building from a MemoryPlan requires feature=<i> "
+                             "(the categorical feature index)")
+        spec = spec.spec_for(feature, num_categories=num_categories, dim=dim)
     if spec.kind == "full" or num_categories <= max(spec.threshold, 1):
         return FullEmbedding(num_categories, dim, param_dtype)
     c = max(1, spec.num_collisions)

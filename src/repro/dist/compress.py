@@ -33,9 +33,13 @@ Each phase moves (n−1)/n · payload bytes → 2(n−1)/n · {2 B, 1 B}/elem vs
 to phase 2 are bitwise identical across replicas, so every replica emits
 the same reduced gradient and the per-replica optimizer updates stay in
 lock-step without a re-broadcast.  Phase 1's compression error is
-telescoped by error feedback; phase 2's is bounded by one compression
-step of the *mean* gradient (bf16 ulp ≈ 0.2%, int8 ≤ 0.4%) and is shared
-by all replicas.
+telescoped by error feedback; phase 2's (one compression step of the
+*mean* gradient — bf16 ulp ≈ 0.2%, int8 ≤ 0.4%, shared by all replicas)
+is, for int8, *also* telescoped: **two-level error feedback** charges
+each device ``n×`` its own shard's requantization residual (it computed
+that shard's mean exactly), so the residual re-enters the next step's
+mean exactly once and the emitted-gradient sum telescopes over both
+levels (``two_level=True``, the default).
 
 ``ef_psum_scatter_grads``-style building blocks for the FSDP path live
 in ``_reduce_scatter_leaf`` (used by ``train.loop.make_fsdp_train_step``):
@@ -129,11 +133,22 @@ def _quant(v, scale):
     return jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
 
 
-def _compressed_allreduce_mean(v, axis_name, mode):
+def _compressed_allreduce_mean(v, axis_name, mode, two_level=True):
     """Two-phase compressed-on-the-wire mean-all-reduce (module docstring).
 
-    Returns ``(mean, deq)``: the replicated mean estimate and this device's
-    decompressed phase-1 contribution (what error feedback charges it for).
+    Returns ``(mean, charged)``: the replicated mean estimate and what
+    error feedback charges this device for — its decompressed phase-1
+    contribution, minus (with ``two_level``, int8 only) the phase-2
+    requantization residual of its own shard scaled by ``n``.
+
+    Two-level error feedback: phase 2 re-quantizes the already-reduced
+    shard mean ``y`` to ``out = q2·scale2``, losing ``r2 = y - out`` — an
+    error *outside* plain EF (which only telescopes phase-1 loss), so it
+    used to bias every step by one int8 step of the mean.  Each device
+    knows ``r2`` exactly for its own shard (it computed ``y`` there), so
+    it charges ``n·r2`` at its shard's positions: summed over the axis
+    each shard's residual enters the next step's mean exactly once, and
+    the emitted-gradient sum telescopes over *both* compression levels.
     """
     n = lax.psum(1, axis_name)
     if mode == "bf16":
@@ -152,6 +167,7 @@ def _compressed_allreduce_mean(v, axis_name, mode):
     # phase 1: each device ends up holding every peer's copy of its shard
     mine = lax.all_to_all(flat.reshape(n, -1), axis_name,
                           split_axis=0, concat_axis=0)
+    corr = None
     if mode == "bf16":
         y = jnp.sum(_bf16_from_wire(mine), axis=0) / n
         gathered = lax.all_gather(_bf16_to_wire(y), axis_name, tiled=True)
@@ -160,14 +176,22 @@ def _compressed_allreduce_mean(v, axis_name, mode):
         shard_sum = jnp.sum(mine.astype(jnp.int32), axis=0)  # exact: ≤ 127·n
         y = shard_sum.astype(jnp.float32) * (scale / n)
         scale2 = _shared_scale(y, axis_name)
-        gathered = lax.all_gather(_quant(y, scale2), axis_name, tiled=True)
+        q2 = _quant(y, scale2)
+        gathered = lax.all_gather(q2, axis_name, tiled=True)
         out = gathered.astype(jnp.float32) * scale2
+        if two_level:
+            r2 = y - q2.astype(jnp.float32) * scale2  # this shard's phase-2 loss
+            corr = lax.dynamic_update_slice(
+                jnp.zeros(flat.shape, jnp.float32), n * r2,
+                (lax.axis_index(axis_name) * y.shape[0],))
     if pad:
         out = out[:-pad]
-    return out.reshape(v.shape), deq
+        corr = corr[:-pad] if corr is not None else None
+    charged = deq if corr is None else deq - corr.reshape(v.shape)
+    return out.reshape(v.shape), charged
 
 
-def _reduce_leaf(g, e, axis_name, mode):
+def _reduce_leaf(g, e, axis_name, mode, two_level=True):
     """Compressed mean-all-reduce of one leaf → (reduced_full, new_err)."""
     v = g.astype(jnp.float32) + e
     if mode == "none":
@@ -181,7 +205,8 @@ def _reduce_leaf(g, e, axis_name, mode):
         return out.astype(g.dtype), v - deq
     if mode == "int8":
         if axis_name:
-            out, deq = _compressed_allreduce_mean(v, axis_name, mode)
+            out, deq = _compressed_allreduce_mean(v, axis_name, mode,
+                                                  two_level=two_level)
         else:
             q, scale = quantize_int8(v)
             deq = q.astype(jnp.float32) * scale
@@ -228,7 +253,8 @@ def _reduce_scatter_leaf(g, e, axis_name, mode, dim):
     raise ValueError(f"unknown compression mode {mode!r}; expected one of {MODES}")
 
 
-def ef_psum_grads(grads, err, *, axis_name=None, mode="bf16"):
+def ef_psum_grads(grads, err, *, axis_name=None, mode="bf16",
+                  two_level=True):
     """Compressed (mean-)reduction of a gradient tree with error feedback.
 
     Args:
@@ -239,6 +265,11 @@ def ef_psum_grads(grads, err, *, axis_name=None, mode="bf16"):
         or ``None`` for local compression only.
       mode: ``"none" | "bf16" | "int8"``, a per-leaf pytree / flat list of
         those, or a ``policy.CompressionPolicy``.
+      two_level: carry the int8 phase-2 requantization residual into the
+        error state as well (``_compressed_allreduce_mean`` docstring), so
+        the time-averaged update telescopes over both compression levels.
+        On by default; off reproduces the single-level behaviour (one int8
+        step of the mean per step of standing bias).
 
     Returns ``(reduced_grads, new_err)``.  The reduction is a *mean* over
     the axis, matching a per-shard-mean loss.
@@ -249,7 +280,7 @@ def ef_psum_grads(grads, err, *, axis_name=None, mode="bf16"):
         raise ValueError("error state does not match gradient tree "
                          f"({len(flat_e)} vs {len(flat_g)} leaves)")
     modes = resolve_modes(grads, mode)
-    out = [_reduce_leaf(g, e, axis_name, m)
+    out = [_reduce_leaf(g, e, axis_name, m, two_level=two_level)
            for g, e, m in zip(flat_g, flat_e, modes)]
     return (jax.tree.unflatten(treedef, [o[0] for o in out]),
             jax.tree.unflatten(treedef, [o[1] for o in out]))

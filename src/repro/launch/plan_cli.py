@@ -1,0 +1,55 @@
+"""Shared ``--plan`` / ``--plan-budget-mb`` CLI resolution for the
+train/serve launchers.
+
+``--plan <path>`` loads a solved ``MemoryPlan`` artifact; ``--plan-budget-mb
+<float>`` synthesizes one on the fly against the arch's table sizes (the
+synthetic Criteo frequency stream) and saves it under ``artifacts/plans/``
+so the decision is auditable and reusable.  The two flags are mutually
+exclusive; both yield a plan the arch's ``config(plan=...)`` consumes.
+"""
+
+from __future__ import annotations
+
+__all__ = ["add_plan_args", "resolve_plan_args"]
+
+
+def add_plan_args(ap) -> None:
+    ap.add_argument("--plan", default=None,
+                    help="path to a repro.plan MemoryPlan JSON: per-feature "
+                         "table strategies replace the uniform --embedding")
+    ap.add_argument("--plan-budget-mb", type=float, default=None,
+                    help="synthesize a memory plan on the fly at this table "
+                         "byte budget (saved under artifacts/plans/)")
+
+
+def resolve_plan_args(mod, args):
+    """A MemoryPlan from the CLI flags, or None when neither is given."""
+    plan_path_arg = getattr(args, "plan", None)
+    budget_mb = getattr(args, "plan_budget_mb", None)
+    if plan_path_arg is None and budget_mb is None:
+        return None
+    if plan_path_arg is not None and budget_mb is not None:
+        raise SystemExit("--plan and --plan-budget-mb are mutually exclusive")
+    if getattr(mod, "FAMILY", "lm") != "rec":
+        # only the rec configs grow a plan= kwarg; fail with intent, not a
+        # TypeError from config()
+        raise SystemExit("--plan/--plan-budget-mb size categorical tables; "
+                         f"{args.arch} is not a rec-family arch")
+    from ..plan import MemoryPlan, plan_for_config, plan_path
+    if plan_path_arg is not None:
+        plan = MemoryPlan.load(plan_path_arg)
+        print(f"plan: loaded {plan_path_arg} "
+              f"({plan.total_bytes / 2**20:.2f} MiB of "
+              f"{plan.budget_bytes / 2**20:.2f} MiB budget, "
+              f"quality {plan.quality:.4f})")
+        return plan
+    budget = int(budget_mb * 2 ** 20)
+    cfg = mod.config(reduced=getattr(args, "reduced", True))
+    plan = plan_for_config(cfg, budget, arch=args.arch)
+    out = plan.save(plan_path(args.arch, budget))
+    s = plan.summary()
+    print(f"plan: solved {args.arch} at {budget_mb:g} MiB "
+          f"({s['budget_frac_of_full']:.3f}x full tables) -> {out}")
+    print(f"plan: quality {plan.quality:.4f} vs uniform-hash "
+          f"{plan.baseline_quality:.4f}; kinds {s['kinds']}")
+    return plan

@@ -63,8 +63,11 @@ def _serve_rec(mod, args):
     from ..serve.cache import HotRowCache
     from ..serve.quantize import memory_report, quantize_params
     from ..serve.recsys import RecsysEngine
+    from .plan_cli import resolve_plan_args
 
-    cfg = mod.config(reduced=True)
+    plan = resolve_plan_args(mod, args)
+    cfg = (mod.config(reduced=True, plan=plan) if plan is not None
+           else mod.config(reduced=True))
     api = mod.api(cfg)
     params = api.init(jax.random.PRNGKey(0))
     qparams = quantize_params(params, mode=args.quantize)
@@ -73,8 +76,20 @@ def _serve_rec(mod, args):
           f"{rep['quant_table_bytes']} B {args.quantize} "
           f"({rep['ratio']:.3f}x)")
 
-    cache = (HotRowCache(capacity_rows=args.cache_rows)
-             if args.cache_rows else None)
+    # cache admits combined f32 rows: 4*D bytes each (quantize.row_bytes
+    # is the same accounting the planner's serve-cost model uses).  With
+    # only --cache-mb given, rows stay unbounded so the byte budget is
+    # the binding limit, not a leftover row default; an explicit
+    # --cache-rows 0 disables the cache outright, as documented.
+    cache_bytes = (int(args.cache_mb * 2 ** 20)
+                   if args.cache_mb is not None else None)
+    if args.cache_rows == 0 or (cache_bytes is not None and cache_bytes <= 0):
+        cache = None  # explicit zero (rows or bytes) disables the cache
+    else:
+        cache_rows = (args.cache_rows if args.cache_rows is not None
+                      else (None if cache_bytes else 4096))
+        cache = HotRowCache(capacity_rows=cache_rows,
+                            capacity_bytes=cache_bytes)
     mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
     engine = RecsysEngine(cfg, qparams, max_batch=args.batch_size,
                           cache=cache, mesh=mesh)
@@ -114,10 +129,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     # recsys knobs
     ap.add_argument("--quantize", default="int8", choices=["f32", "bf16", "int8"])
-    ap.add_argument("--cache-rows", type=int, default=4096,
-                    help="hot-row cache capacity (0 disables the cache)")
+    ap.add_argument("--cache-rows", type=int, default=None,
+                    help="hot-row cache row capacity (0 disables the cache "
+                         "entirely; default 4096, or unbounded rows when "
+                         "--cache-mb alone is given so the byte budget "
+                         "actually binds)")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="hot-row cache byte budget (admission stops at "
+                         "this many MiB of resident f32 rows)")
     ap.add_argument("--max-bag", type=int, default=4,
                     help="max multi-hot ids per categorical feature")
+    from .plan_cli import add_plan_args
+    add_plan_args(ap)
     args = ap.parse_args()
 
     from ..configs import get_arch

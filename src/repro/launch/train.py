@@ -12,6 +12,8 @@ import os
 import jax
 import numpy as np
 
+from .plan_cli import add_plan_args, resolve_plan_args
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -29,6 +31,7 @@ def main():
                     help="gradient-compression policy for the explicit "
                          "data-parallel step (repro.dist.policy); omit for "
                          "the plain pjit step")
+    add_plan_args(ap)
     args = ap.parse_args()
 
     from ..configs import get_arch
@@ -37,13 +40,18 @@ def main():
                               make_dp_train_step, make_train_step)
 
     mod = get_arch(args.arch)
-    cfg = mod.config(reduced=args.reduced, embedding=args.embedding)
+    plan = resolve_plan_args(mod, args)
+    if plan is not None:
+        cfg = mod.config(reduced=args.reduced, plan=plan)
+    else:
+        cfg = mod.config(reduced=args.reduced, embedding=args.embedding)
     api = mod.api(cfg)
     shape = Shape("cli", args.seq_len, args.batch, "train")
 
     params = api.init(jax.random.PRNGKey(0))
     n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
-    print(f"{args.arch}: {n:,} parameters (embedding={args.embedding})")
+    emb_desc = "plan" if plan is not None else args.embedding
+    print(f"{args.arch}: {n:,} parameters (embedding={emb_desc})")
 
     if args.compress_policy is not None:
         # ROADMAP follow-up: the policy engine, selectable from the CLI.

@@ -46,9 +46,15 @@ class DLRMConfig:
 
 
 def tables_for(cfg) -> list:
-    """Embedding module per categorical feature (threshold rule applies)."""
-    return [make_embedding(n, cfg.emb_dim, cfg.embedding, cfg.pdtype)
-            for n in cfg.table_sizes]
+    """Embedding module per categorical feature (threshold rule applies).
+
+    ``cfg.embedding`` may be a single ``EmbeddingSpec`` (uniform strategy)
+    or a ``repro.plan.MemoryPlan`` (per-feature strategies from the
+    memory-budget planner — the feature index routes the lookup).
+    """
+    return [make_embedding(n, cfg.emb_dim, cfg.embedding, cfg.pdtype,
+                           feature=i)
+            for i, n in enumerate(cfg.table_sizes)]
 
 
 def _feature_mode(cfg) -> bool:

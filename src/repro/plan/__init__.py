@@ -1,0 +1,43 @@
+"""repro.plan — frequency-aware memory-budget planner for embedding tables.
+
+The paper turns embedding memory into a *structure* knob (complementary
+partitions); this subsystem turns it into an *allocation* decision: given
+per-feature cardinalities, empirical category-frequency histograms, and a
+global byte budget, choose a per-feature configuration (full / hashed /
+QR / generalized-QR, with train-f32 or serve-int8 byte accounting) that
+maximizes a frequency-weighted analytic quality proxy — and emit it as a
+serializable, executable ``MemoryPlan``.
+
+Pipeline::
+
+    freq.stats_from_criteo / power_law_stats      # traffic histograms
+      -> candidates.enumerate_candidates          # spec ladder per feature
+      -> solver.solve_budget                      # Lagrangian-greedy knapsack
+      -> MemoryPlan (artifacts/plans/*.json)      # consumed by train/serve
+
+Consumers: ``core.factory.make_embedding`` builds directly from a plan
+(``feature=`` selects the table), ``launch.train`` / ``launch.serve``
+take ``--plan`` / ``--plan-budget-mb``, and ``benchmarks/plan_bench.py``
+sweeps budgets against the uniform-hashing control.
+"""
+
+from .candidates import Candidate, candidate_specs, enumerate_candidates
+from .freq import (FeatureStats, power_law_stats, stats_from_batches,
+                   stats_from_criteo)
+from .memory_plan import PLAN_DIR, MemoryPlan, TablePlan, plan_path
+from .planner import (build_plan, full_table_bytes, plan_for_config,
+                      uniform_hash_plan)
+from .quality import (module_partitions, partition_diagnostics,
+                      partition_entropy, proxy_loss, proxy_quality, sharing)
+from .solver import InfeasibleBudget, concave_frontier, solve_budget
+
+__all__ = [
+    "FeatureStats", "stats_from_batches", "stats_from_criteo",
+    "power_law_stats",
+    "Candidate", "candidate_specs", "enumerate_candidates",
+    "proxy_loss", "proxy_quality", "sharing", "partition_entropy",
+    "partition_diagnostics", "module_partitions",
+    "concave_frontier", "solve_budget", "InfeasibleBudget",
+    "TablePlan", "MemoryPlan", "PLAN_DIR", "plan_path",
+    "build_plan", "uniform_hash_plan", "plan_for_config", "full_table_bytes",
+]

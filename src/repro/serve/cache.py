@@ -19,8 +19,13 @@ Design constraints (all pinned by tests):
   is what makes cache behaviour assertable in CI.
 * **accounted** — hits, misses, evictions, insertions, and resident bytes
   are first-class counters; the serve bench reports them per cell.
-* **bounded** — ``capacity_rows`` rows max; admission beyond that evicts
-  per ``policy`` ("lru" or "lfu").
+* **bounded** — ``capacity_rows`` rows max, and/or ``capacity_bytes``
+  resident bytes max (sized against the row-bytes accounting in
+  ``serve.quantize.row_bytes`` — cached rows are combined f32, 4·D each);
+  admission beyond either bound evicts per ``policy`` ("lru" or "lfu").
+  A row bigger than the whole byte budget is *rejected* (counted in
+  ``stats.rejections``) rather than flushing the cache for an inadmissible
+  key.
 """
 
 from __future__ import annotations
@@ -41,6 +46,7 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     insertions: int = 0
+    rejections: int = 0            # rows larger than the whole byte budget
     bytes_cached: int = 0
 
     @property
@@ -54,18 +60,25 @@ class CacheStats:
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "insertions": self.insertions,
+                "rejections": self.rejections,
                 "bytes_cached": self.bytes_cached,
                 "lookups": self.lookups, "hit_rate": self.hit_rate}
 
 
 class HotRowCache:
-    def __init__(self, capacity_rows: int = 4096, policy: str = "lfu",
-                 record_events: bool = False):
+    def __init__(self, capacity_rows: Optional[int] = 4096,
+                 policy: str = "lfu", record_events: bool = False,
+                 capacity_bytes: Optional[int] = None):
         if policy not in POLICIES:
             raise ValueError(f"policy={policy!r} not in {POLICIES}")
-        if capacity_rows < 1:
-            raise ValueError("capacity_rows must be >= 1")
+        if capacity_rows is None and capacity_bytes is None:
+            raise ValueError("need capacity_rows and/or capacity_bytes")
+        if capacity_rows is not None and capacity_rows < 1:
+            raise ValueError("capacity_rows must be >= 1 (or None)")
+        if capacity_bytes is not None and capacity_bytes < 1:
+            raise ValueError("capacity_bytes must be >= 1 (or None)")
         self.capacity_rows = capacity_rows
+        self.capacity_bytes = capacity_bytes
         self.policy = policy
         self.stats = CacheStats()
         self.record_events = record_events
@@ -101,28 +114,55 @@ class HotRowCache:
         self._event("hit", key)
         return row
 
-    def _victim(self) -> Hashable:
+    def _victim(self, exclude: Hashable = None) -> Hashable:
+        pool = (self._rows if exclude is None or exclude not in self._rows
+                else [k for k in self._rows if k != exclude])
         if self.policy == "lru":
-            return min(self._rows, key=lambda k: self._used[k])
+            return min(pool, key=lambda k: self._used[k])
         # lfu: least frequency, ties by least recent use, then admission order
-        return min(self._rows,
+        return min(pool,
                    key=lambda k: (self._freq[k], self._used[k],
                                   self._inserted[k]))
 
+    def _remove(self, key: Hashable) -> None:
+        """Drop ``key`` with full eviction bookkeeping (stats + event)."""
+        self.stats.bytes_cached -= self._rows[key].nbytes
+        del self._rows[key], self._freq[key]
+        del self._used[key], self._inserted[key]
+        self.stats.evictions += 1
+        self._event("evict", key)
+
+    def _evict_one(self, exclude: Hashable = None) -> None:
+        self._remove(self._victim(exclude))
+
+    def _over_bytes(self, incoming: int) -> bool:
+        return (self.capacity_bytes is not None
+                and self.stats.bytes_cached + incoming > self.capacity_bytes)
+
     def put(self, key, row) -> None:
-        """Admit ``row`` under ``key``, evicting per policy when full."""
+        """Admit ``row`` under ``key``, evicting per policy when full —
+        by row count and/or resident bytes, whichever binds first."""
         row = np.asarray(row)
+        if self.capacity_bytes is not None and row.nbytes > self.capacity_bytes:
+            # inadmissible: even an empty cache couldn't hold it; refusing
+            # beats flushing every resident row for a key we can't keep
+            self.stats.rejections += 1
+            self._event("reject", key)
+            if key in self._rows:  # the stale smaller value must not linger
+                self._remove(key)
+            return
         if key in self._rows:  # refresh in place (value update, not a use)
             self.stats.bytes_cached += row.nbytes - self._rows[key].nbytes
             self._rows[key] = row
+            # a grown refresh can push past the budget: shed other rows
+            while self._over_bytes(0) and len(self._rows) > 1:
+                self._evict_one(exclude=key)
             return
-        while len(self._rows) >= self.capacity_rows:
-            victim = self._victim()
-            self.stats.bytes_cached -= self._rows[victim].nbytes
-            del self._rows[victim], self._freq[victim]
-            del self._used[victim], self._inserted[victim]
-            self.stats.evictions += 1
-            self._event("evict", victim)
+        while (self.capacity_rows is not None
+               and len(self._rows) >= self.capacity_rows):
+            self._evict_one()
+        while self._over_bytes(row.nbytes) and self._rows:
+            self._evict_one()
         self._clock += 1
         self._admissions += 1
         self._rows[key] = row

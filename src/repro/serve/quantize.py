@@ -51,7 +51,7 @@ from ..optim.optimizers import leaf_paths
 
 __all__ = ["MODES", "TABLE_PATTERN", "quantize_table", "dequantize_rows",
            "dequantize_table", "is_quantized_table", "quantize_params",
-           "table_bytes", "memory_report", "paths_and_leaves"]
+           "table_bytes", "memory_report", "paths_and_leaves", "row_bytes"]
 
 MODES = ("f32", "bf16", "int8")
 
@@ -63,6 +63,19 @@ TABLE_PATTERN = r"(^|/)(embed\w*|wte|tok_emb|tables?)(/|$)|(^|/)table_\d+($|/)"
 # rounding the zero-point to an integer can never push a code out of range.
 _QMAX = 127
 _STEPS = 2 * _QMAX - 2  # 252
+
+
+def row_bytes(dim: int, mode: str = "int8") -> int:
+    """Bytes per stored table row of width ``dim`` under ``mode``.
+
+    The single bytes/row model shared by the serving stack (cache byte
+    budgets, ``table_bytes``) and the memory planner's serve-cost domain:
+    int8 rows carry ``dim`` q bytes + 2 (bf16 scale) + 1 (int8 zp).
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown quantization mode {mode!r}; "
+                         f"expected one of {MODES}")
+    return {"f32": 4 * dim, "bf16": 2 * dim, "int8": dim + 3}[mode]
 
 
 def quantize_table(w) -> dict:

@@ -405,6 +405,65 @@ def test_dist_bench_acceptance_dp():
 
 
 @pytest.mark.slow
+def test_two_level_ef_tightens_int8_phase2_bias_8dev():
+    """Two-level error feedback (phase-2 requant residual carried into the
+    EF state) on the int8 two-phase exchange: with a *constant* per-device
+    gradient, single-level EF converges to a standing bias of one int8
+    step of the mean (phase 2 loses the same residual every step), while
+    two-level telescopes it — the time-averaged output must land well
+    inside the single-level floor, and replicas stay bitwise identical."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.compress import ef_psum_grads
+
+        mesh = jax.make_mesh((8,), ("data",))
+        D = 64
+        g_all = (jax.random.normal(jax.random.PRNGKey(0), (8, D)) * 3e-3
+                 + jnp.linspace(-1e-3, 1e-3, 8)[:, None])
+        true_mean = np.asarray(g_all).mean(axis=0)
+
+        def run(two_level, T=60):
+            def step(g_shard, err_shard, total_shard):
+                g = {"w": g_shard.reshape(D)}
+                err = {"w": err_shard.reshape(D)}
+                out, new_err = ef_psum_grads(g, err, axis_name="data",
+                                             mode="int8",
+                                             two_level=two_level)
+                return (new_err["w"][None],
+                        (total_shard.reshape(D) + out["w"])[None])
+            sharded = shard_map(step, mesh=mesh, in_specs=(P("data"),) * 3,
+                                out_specs=(P("data"),) * 2, check_rep=False)
+            err = jnp.zeros((8, D)); total = jnp.zeros((8, D))
+            with mesh:
+                fn = jax.jit(sharded)
+                for _ in range(T):
+                    err, total = fn(g_all, err, total)
+            totals = np.asarray(total)
+            for r in range(1, 8):
+                np.testing.assert_array_equal(totals[r], totals[0])
+            return float(np.abs(totals[0] / T - true_mean).max())
+
+        print(json.dumps({"single": run(False), "two": run(True),
+                          "scale": float(np.abs(true_mean).max())}))
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH=f"{REPO}/src"),
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    # two-level telescopes phase 2: decisively under the single-level
+    # standing bias, and within EF's O(residual / T) envelope of the truth
+    assert out["two"] <= out["single"] / 3, out
+    assert out["two"] <= 5e-4 * out["scale"] + 1e-7, out
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["bf16", "int8"])
 def test_ef_psum_unbiased_over_time_8dev_shard_map(mode):
     """Under a real 8-device shard_map psum with per-device-distinct

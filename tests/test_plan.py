@@ -1,0 +1,270 @@
+"""repro.plan invariants: the planner's promises, pinned.
+
+* budget is never exceeded, in either byte domain;
+* every compositional choice is a complementary family (Definition 1);
+* total quality is monotone non-decreasing in budget;
+* a plan round-trips through JSON and ``make_embedding`` to the exact
+  same ``num_params`` (cost model == built model);
+* the planner strictly beats the uniform-hashing control under skew;
+* the from-plan path trains (and ``launch.train --plan`` runs end to end).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_embedding
+from repro.core.factory import EmbeddingSpec
+from repro.core.partitions import (RemainderPartition, is_complementary,
+                                   qr_partitions)
+from repro.plan import (FeatureStats, InfeasibleBudget, MemoryPlan,
+                        build_plan, concave_frontier, enumerate_candidates,
+                        full_table_bytes, power_law_stats, proxy_loss,
+                        proxy_quality, stats_from_batches, uniform_hash_plan)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SIZES = (1000, 200, 50000, 12000, 31, 24, 12517, 633, 3, 931)
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def stats():
+    return [power_law_stats(n, alpha=1.2) for n in SIZES]
+
+
+# ------------------------------------------------------------ quality proxy
+
+
+def test_proxy_full_table_is_perfect():
+    st = power_law_stats(100, alpha=1.0)
+    full = make_embedding(100, 8, EmbeddingSpec(kind="full"))
+    from repro.plan import module_partitions
+    assert proxy_quality(module_partitions(full), st) == 1.0
+
+
+def test_proxy_hash_matches_collision_mass_brute_force():
+    """k=1 (hashing): the proxy must equal sum_b M_b^2 - sum_i p_i^2 — the
+    frequency-weighted collision mass — computed the slow way."""
+    rng = np.random.default_rng(0)
+    n, m = 97, 13
+    probs = rng.random(n)
+    probs /= probs.sum()
+    st = FeatureStats(size=n, ids=np.arange(n), probs=probs)
+    part = RemainderPartition(size=n, num_buckets=m, m=m)
+    want = sum(probs[i] * sum(probs[j] for j in range(n)
+                              if j != i and j % m == i % m)
+               for i in range(n))
+    assert abs(proxy_loss([part], st) - want) < 1e-12
+
+
+def test_proxy_qr_below_hash_at_equal_rows():
+    """A complementary QR pair must score strictly better than plain
+    hashing with the same remainder table (the paper's core claim)."""
+    st = power_law_stats(5000, alpha=1.1)
+    m = 64
+    hash_part = [RemainderPartition(size=5000, num_buckets=m, m=m)]
+    qr = qr_partitions(5000, m)
+    assert proxy_loss(qr, st) < proxy_loss(hash_part, st)
+    assert proxy_quality(qr, st) > proxy_quality(hash_part, st)
+
+
+def test_stats_from_batches_counts_and_multihot():
+    batches = [{"sparse": np.array([[0, 1], [0, 2], [3, 1]])},
+               {"sparse": np.array([[0, 2]])}]
+    s = stats_from_batches(batches, table_sizes=(5, 4))
+    assert s[0].size == 5 and s[0].support == 2
+    np.testing.assert_allclose(s[0].probs, [0.75, 0.25])  # 0:3, 3:1
+    # multi-hot with -1 padding is skipped
+    mh = [{"sparse": np.array([[[0, -1], [1, 1]]])}]
+    s2 = stats_from_batches(mh, table_sizes=(3, 3))
+    assert s2[0].support == 1 and s2[1].support == 1
+    np.testing.assert_allclose(s2[1].probs, [1.0])
+
+
+# ------------------------------------------------------------ solver
+
+
+def test_budget_never_exceeded(stats):
+    full = full_table_bytes(SIZES, DIM)
+    for frac in (0.02, 0.05, 0.1, 0.2, 0.4, 0.8):
+        budget = int(full * frac)
+        for domain in ("train_f32", "serve_int8"):
+            b = (budget if domain == "train_f32"
+                 else int(full_table_bytes(SIZES, DIM, domain) * frac))
+            plan = build_plan(stats, DIM, b, bytes_domain=domain)
+            assert plan.total_bytes <= b, (frac, domain)
+            u = uniform_hash_plan(stats, DIM, b, bytes_domain=domain)
+            assert u.total_bytes <= b, (frac, domain)
+
+
+def test_infeasible_budget_raises(stats):
+    with pytest.raises(InfeasibleBudget):
+        build_plan(stats, DIM, len(SIZES) * DIM * 4 - 1)  # below 1 row/table
+
+
+def test_quality_monotone_in_budget(stats):
+    full = full_table_bytes(SIZES, DIM)
+    qs = [build_plan(stats, DIM, int(full * f)).quality
+          for f in (0.03, 0.05, 0.08, 0.125, 0.2, 0.25, 0.4, 0.5, 0.75, 1.0)]
+    for a, b in zip(qs, qs[1:]):
+        assert b >= a - 1e-12, qs
+    assert qs[-1] == 1.0  # full budget -> every table full -> perfect proxy
+
+
+def test_planner_beats_uniform_hash(stats):
+    full = full_table_bytes(SIZES, DIM)
+    for frac in (0.05, 0.125, 0.25, 0.5):
+        p = build_plan(stats, DIM, int(full * frac))
+        u = uniform_hash_plan(stats, DIM, int(full * frac))
+        assert p.quality > u.quality, (frac, p.quality, u.quality)
+
+
+def test_concave_frontier_slopes_decrease(stats):
+    cands = enumerate_candidates(0, stats[2], DIM)  # the 50k feature
+    cost = lambda c: c.train_bytes
+    hull = concave_frontier(cands, cost)
+    assert len(hull) >= 2
+    for a, b in zip(hull, hull[1:]):
+        assert cost(b) > cost(a) and b.quality > a.quality
+    slopes = [(b.quality - a.quality) / (cost(b) - cost(a))
+              for a, b in zip(hull, hull[1:])]
+    for s1, s2 in zip(slopes, slopes[1:]):
+        assert s2 < s1
+
+
+# ------------------------------------------------------------ emitted plans
+
+
+def test_compositional_choices_complementary(stats):
+    full = full_table_bytes(SIZES, DIM)
+    plan = build_plan(stats, DIM, int(full * 0.05))
+    comp = [t for t in plan.tables if t.kind in ("qr", "mixed_radix", "crt")]
+    assert comp, "a 5% budget must force compositional tables"
+    for t in comp:
+        mod = make_embedding(t.num_categories, DIM, t.spec())
+        assert is_complementary(mod.partitions, t.num_categories), t
+        assert t.complementary is True  # and the plan recorded it
+
+
+def test_concat_cost_model_matches_built_bytes():
+    """op='concat' sub-tables are dim/k wide — num_params is not a
+    multiple of dim, which the physical (rows, width) accounting must
+    survive: plan bytes == 4x the num_params make_embedding builds."""
+    sizes = (1001, 500, 3331)
+    st = [power_law_stats(n, alpha=1.2) for n in sizes]
+    full = full_table_bytes(sizes, DIM)
+    for frac in (0.1, 0.3):
+        plan = build_plan(st, DIM, int(full * frac), op="concat")
+        built = sum(make_embedding(n, DIM, plan, feature=i).num_params
+                    for i, n in enumerate(sizes))
+        assert built * 4 == plan.total_bytes
+        assert plan.total_bytes <= int(full * frac)
+
+
+def test_plan_json_roundtrip_same_num_params(tmp_path, stats):
+    full = full_table_bytes(SIZES, DIM)
+    plan = build_plan(stats, DIM, int(full * 0.125), arch="roundtrip")
+    path = plan.save(str(tmp_path / "plan.json"))
+    loaded = MemoryPlan.load(path)
+    assert loaded.to_json() == plan.to_json()
+    n_direct = sum(make_embedding(n, DIM, plan, feature=i).num_params
+                   for i, n in enumerate(SIZES))
+    n_loaded = sum(make_embedding(n, DIM, loaded, feature=i).num_params
+                   for i, n in enumerate(SIZES))
+    assert n_direct == n_loaded == plan.total_bytes // 4
+    assert loaded.table_sizes == SIZES
+
+
+def test_from_plan_path_validates(stats):
+    plan = build_plan(stats, DIM, full_table_bytes(SIZES, DIM))
+    with pytest.raises(ValueError, match="feature"):
+        make_embedding(SIZES[0], DIM, plan)  # no feature index
+    with pytest.raises(ValueError, match="categories"):
+        make_embedding(SIZES[0] + 1, DIM, plan, feature=0)
+    with pytest.raises(ValueError, match="emb_dim"):
+        make_embedding(SIZES[0], DIM + 1, plan, feature=0)
+    with pytest.raises(ValueError, match="no feature"):
+        make_embedding(SIZES[0], DIM, plan, feature=len(SIZES))
+
+
+def test_dlrm_trains_from_plan(stats):
+    """config(plan=...) -> init -> one jitted train step: the end-to-end
+    from-plan wiring models/configs/train all share."""
+    from repro.configs import dlrm_criteo
+    from repro.data.criteo import CriteoSpec, batch_at
+    from repro.train.loop import init_state, make_train_step
+
+    small = (120, 77, 350)
+    st_small = [power_law_stats(n, alpha=1.2) for n in small]
+    plan = build_plan(st_small, DIM, full_table_bytes(small, DIM) // 5,
+                      arch="dlrm-criteo")
+    from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn
+    cfg = DLRMConfig(table_sizes=small, emb_dim=DIM, embedding=plan)
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    spec = CriteoSpec(table_sizes=small, zipf=1.5, noise=0.5)
+    from repro.optim.optimizers import adagrad
+    state = init_state(params, adagrad(1e-2))
+    step = jax.jit(make_train_step(lambda p, b: dlrm_loss_fn(p, b, cfg),
+                                   adagrad(1e-2)))
+    losses = []
+    for i in range(3):
+        state, m = step(state, batch_at(0, i, 32, spec))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses), losses
+    # size-mismatched plan fails loudly through config validation
+    from repro.configs.common import resolve_plan
+    with pytest.raises(ValueError, match="table sizes"):
+        resolve_plan(plan, (120, 77, 351))
+
+
+@pytest.mark.slow
+def test_launch_train_cli_with_generated_plan(tmp_path):
+    """The acceptance path: synthesize a plan for the reduced dlrm config,
+    then ``launch.train --plan`` runs a smoke training from it."""
+    from repro.configs import dlrm_criteo
+    from repro.plan import plan_for_config
+
+    cfg = dlrm_criteo.config(reduced=True)
+    plan = plan_for_config(cfg, full_table_bytes(cfg.table_sizes,
+                                                 cfg.emb_dim) // 8,
+                           arch="dlrm-criteo", num_batches=8, batch_size=256)
+    path = plan.save(str(tmp_path / "dlrm_plan.json"))
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "dlrm-criteo",
+         "--steps", "3", "--batch", "32", "--log-every", "1",
+         "--plan", path],
+        capture_output=True, text=True, cwd=str(tmp_path),
+        env=dict(os.environ, PYTHONPATH=f"{REPO}/src"), timeout=900)
+    assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-2000:])
+    assert "embedding=plan" in res.stdout
+    assert "loss" in res.stdout
+
+
+@pytest.mark.slow
+def test_plan_bench_acceptance():
+    """benchmarks/plan_bench.py end to end: exits 0, BENCH_plan.json's own
+    acceptance checks all pass, and the sweep covers every budget."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "BENCH_plan.json")
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.plan_bench",
+             "--stats-batches", "6", "--batch-size", "256",
+             "--no-save-plans", "--out", out],
+            capture_output=True, text=True, cwd=REPO,
+            env=dict(os.environ, PYTHONPATH=f"{REPO}/src"), timeout=900)
+        assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-2000:])
+        with open(out) as f:
+            report = json.load(f)
+    assert report["checks_failed"] == [], report["checks_failed"]
+    assert len(report["rows"]) == 8  # 2 archs x 4 budgets
+    for r in report["rows"]:
+        assert r["plan_bytes"] <= r["budget_bytes"], r
+        assert r["quality"] > r["uniform_quality"], r

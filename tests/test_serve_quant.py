@@ -236,6 +236,56 @@ def test_cache_counters_and_bytes():
         HotRowCache(policy="mru")
 
 
+def test_cache_byte_budget_admission():
+    """capacity_bytes binds independently of capacity_rows: resident bytes
+    never exceed the budget, eviction order stays the policy's."""
+    from repro.serve.quantize import row_bytes
+    d = 16
+    row = np.ones(d, np.float32)          # 4*d = row_bytes(d, "f32") bytes
+    assert row.nbytes == row_bytes(d, "f32")
+    c = HotRowCache(capacity_rows=100, policy="lru",
+                    capacity_bytes=3 * row.nbytes, record_events=True)
+    for k in "abc":
+        c.put(k, row)
+    assert len(c) == 3 and c.stats.bytes_cached == 3 * row.nbytes
+    c.put("d", row)                        # over budget: evicts LRU "a"
+    assert "a" not in c and len(c) == 3
+    assert c.stats.bytes_cached <= c.capacity_bytes
+    assert ("evict", "a") in c.events
+
+
+def test_cache_bytes_only_capacity_and_oversized_reject():
+    c = HotRowCache(capacity_rows=None, capacity_bytes=100)
+    small = np.ones(4, np.float32)         # 16 B
+    for k in range(6):                     # 6*16 = 96 B fits
+        c.put(k, small)
+    assert len(c) == 6 and c.stats.bytes_cached == 96
+    c.put(99, small)                       # 112 > 100: evicts one
+    assert len(c) == 6 and c.stats.bytes_cached <= 100
+    big = np.ones(64, np.float32)          # 256 B > whole budget
+    c.put("big", big)                      # rejected, cache untouched
+    assert "big" not in c and len(c) == 6
+    assert c.stats.rejections == 1
+    with pytest.raises(ValueError):
+        HotRowCache(capacity_rows=None, capacity_bytes=None)
+
+
+def test_cache_byte_budget_replay_deterministic():
+    rng = np.random.default_rng(1)
+    stream = [("t", int(k), int(k) % 5) for k in rng.integers(0, 30, 200)]
+    kw = dict(capacity_rows=64, capacity_bytes=24 * 16, policy="lfu")
+    a = HotRowCache(**kw).replay(stream, row_bytes=16)
+    b = HotRowCache(**kw).replay(stream, row_bytes=16)
+    assert a == b
+    # the byte bound genuinely binds (smaller than the row bound alone)
+    unbounded = HotRowCache(capacity_rows=64, policy="lfu")
+    unbounded.replay(stream, row_bytes=16)
+    bounded = HotRowCache(**kw)
+    bounded.replay(stream, row_bytes=16)
+    assert bounded.stats.bytes_cached <= 24 * 16
+    assert bounded.stats.evictions > unbounded.stats.evictions
+
+
 # -------------------------------------------------------------- RecsysEngine
 
 
