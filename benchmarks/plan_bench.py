@@ -1,28 +1,42 @@
-"""Memory-planner benchmark: budget sweep vs the uniform-hashing control.
+"""Memory-planner benchmark: budget sweep vs the uniform-hashing control,
+uniform-width vs mixed-dimension.
 
 For each rec arch (the paper's DLRM + DCN, reduced Criteo configs) the
 bench streams per-feature frequency stats from the synthetic Criteo
 generator, then solves the budgeted allocation at
 ``{0.05, 0.125, 0.25, 0.5}×`` of the all-full-table bytes and compares
 the planner against a uniform-hashing baseline *at the same budget and
-under the same byte accounting*.
+under the same byte accounting*.  Each cell is solved twice: at the
+uniform width D and with the mixed-dimension ladder {D/4, D/2, D}
+(``plan.dim_ladder``) — the width axis the dim-aware proxy prices.
 
 Built-in acceptance checks (any failure -> ``/ERROR`` row + exit 1, the
 ``dist_bench``/``serve_bench`` contract):
 
 * **budget respected** — planned bytes <= budget at every cell, exactly
   (the plan's claimed bytes must also equal ``num_params x 4`` of the
-  modules ``make_embedding`` actually builds from it — cost-model drift
-  fails the bench, not just a test);
+  modules ``make_embedding`` actually builds from it — for the mixed-dim
+  plan checked *per table*, so per-feature width drift fails the bench,
+  not just a test);
 * **beats uniform hashing** — the planner's frequency-weighted quality
   proxy is *strictly* above the uniform-hash control at every budget;
+* **mixed-dim beats uniform-dim** — the mixed-dimension plan never
+  scores below the same-budget uniform-width plan, and *strictly* beats
+  it at the 0.125× budget (the deployment point the issue pins);
 * **complementary** — every compositional choice (qr / mixed_radix)
   passes ``core.partitions.is_complementary`` (brute force; reduced
   sizes are all below the check cap);
-* **monotone** — plan quality never decreases as the budget grows.
+* **monotone** — plan quality never decreases as the budget grows, in
+  both the uniform-width and the mixed-dim sweeps.
+
+Parked upgrades (``plan.notes["parked"]`` — hull upgrades that did not
+fit the budget) ride in every CSV row and in the JSON so a budget sweep
+can't silently under-allocate (the ROADMAP "no silent caps" rule).
 
 Artifacts: ``artifacts/bench/BENCH_plan.json`` (+ each solved plan under
-``artifacts/plans/``) and CSV on stdout (``name,us_per_call,derived``).
+``artifacts/plans/``), a compact mirror at the repo top level
+(``BENCH_plan.json``: totals + acceptance booleans, the perf-trajectory
+hook), and CSV on stdout (``name,us_per_call,derived``).
 
 Usage::
 
@@ -40,6 +54,8 @@ import time
 ART = "artifacts/bench"
 ARCHS = ("dlrm-criteo", "dcn-criteo")
 BUDGET_FRACS = (0.05, 0.125, 0.25, 0.5)
+# the budget where the mixed-dim plan must *strictly* beat uniform-width
+MIXED_STRICT_FRAC = 0.125
 
 
 def _stats_for(arch: str, num_batches: int, batch_size: int):
@@ -55,8 +71,8 @@ def _stats_for(arch: str, num_batches: int, batch_size: int):
 
 def _plan_cell(arch: str, cfg, stats, frac: float, save: bool) -> dict:
     from repro.core import make_embedding
-    from repro.plan import (build_plan, full_table_bytes, plan_path,
-                            uniform_hash_plan)
+    from repro.plan import (build_plan, dim_ladder, full_table_bytes,
+                            plan_path, uniform_hash_plan)
 
     dim = cfg.emb_dim
     full = full_table_bytes(cfg.table_sizes, dim)
@@ -65,15 +81,26 @@ def _plan_cell(arch: str, cfg, stats, frac: float, save: bool) -> dict:
     t0 = time.monotonic()
     plan = build_plan(stats, dim, budget, arch=arch, baseline=uniform)
     solve_s = time.monotonic() - t0
+    t0 = time.monotonic()
+    mixed = build_plan(stats, dim, budget, arch=f"{arch}-mixed",
+                       baseline=uniform, dims=dim_ladder(dim))
+    mixed_solve_s = time.monotonic() - t0
     if save:
         plan.save(plan_path(arch, budget))
+        mixed.save(plan_path(f"{arch}-mixed", budget))
 
     # executable round-trip: the bytes the plan claims are the bytes the
-    # factory builds (f32 train domain: 4 B per parameter)
+    # factory builds (f32 train domain: 4 B per parameter); for the
+    # mixed-dim plan the check is per table so width drift can't cancel
     built_params = sum(
         make_embedding(n, dim, plan, feature=i).num_params
         for i, n in enumerate(cfg.table_sizes))
-    comp_ok = all(t.complementary is True for t in plan.tables
+    mixed_built_ok = all(
+        make_embedding(n, dim, mixed, feature=i).num_params * 4
+        == mixed.tables[i].train_bytes
+        for i, n in enumerate(cfg.table_sizes))
+    comp_ok = all(t.complementary is True
+                  for p in (plan, mixed) for t in p.tables
                   if t.kind in ("qr", "mixed_radix", "crt"))
     return {
         "arch": arch, "budget_frac": frac, "budget_bytes": budget,
@@ -82,8 +109,17 @@ def _plan_cell(arch: str, cfg, stats, frac: float, save: bool) -> dict:
         "uniform_bytes": uniform.total_bytes,
         "quality": plan.quality, "uniform_quality": uniform.quality,
         "kinds": plan.summary()["kinds"],
+        "parked": len(plan.notes.get("parked", [])),
+        "leftover_bytes": plan.notes.get("leftover_bytes", 0),
+        "mixed_quality": mixed.quality,
+        "mixed_bytes": mixed.total_bytes,
+        "mixed_built_bytes_ok": mixed_built_ok,
+        "mixed_dims": mixed.summary()["dims"],
+        "mixed_kinds": mixed.summary()["kinds"],
+        "mixed_parked": len(mixed.notes.get("parked", [])),
         "compositional_complementary": comp_ok,
         "solve_ms": round(solve_s * 1e3, 2),
+        "mixed_solve_ms": round(mixed_solve_s * 1e3, 2),
     }
 
 
@@ -116,6 +152,25 @@ def check(report: dict) -> list[tuple[str, str]]:
             failures.append((cell, f"plan quality {r['quality']:.6f} does not "
                                    f"beat uniform hashing "
                                    f"{r['uniform_quality']:.6f}"))
+        if r["mixed_bytes"] > r["budget_bytes"]:
+            failures.append((cell, f"mixed-dim planned bytes "
+                                   f"{r['mixed_bytes']} exceed budget "
+                                   f"{r['budget_bytes']}"))
+        if not r["mixed_built_bytes_ok"]:
+            failures.append((cell, "mixed-dim cost-model drift: a table's "
+                                   "built bytes differ from its planned "
+                                   "train_bytes"))
+        if r["mixed_quality"] < r["quality"] - 1e-12:
+            failures.append((cell, f"mixed-dim quality "
+                                   f"{r['mixed_quality']:.8f} fell below the "
+                                   f"uniform-dim plan's {r['quality']:.8f}"))
+        if r["budget_frac"] == MIXED_STRICT_FRAC \
+                and not r["mixed_quality"] > r["quality"]:
+            failures.append((cell, f"mixed-dim quality "
+                                   f"{r['mixed_quality']:.8f} does not "
+                                   f"strictly beat the uniform-dim plan's "
+                                   f"{r['quality']:.8f} at the "
+                                   f"{MIXED_STRICT_FRAC:g}x budget"))
         if not r["compositional_complementary"]:
             failures.append((cell, "a compositional choice failed "
                                    "is_complementary"))
@@ -127,7 +182,50 @@ def check(report: dict) -> list[tuple[str, str]]:
                     (f"{arch}/b{b['budget_frac']:g}",
                      f"quality {b['quality']:.6f} dropped below the "
                      f"smaller budget's {a['quality']:.6f}"))
+            if b["mixed_quality"] < a["mixed_quality"] - 1e-12:
+                failures.append(
+                    (f"{arch}/b{b['budget_frac']:g}",
+                     f"mixed-dim quality {b['mixed_quality']:.6f} dropped "
+                     f"below the smaller budget's "
+                     f"{a['mixed_quality']:.6f}"))
     return failures
+
+
+def summarize(report: dict) -> dict:
+    """The compact top-level mirror (``BENCH_plan.json`` at the repo
+    root): totals + acceptance booleans, the schema the perf-trajectory
+    tooling consumes — keep keys stable."""
+    rows = report["rows"]
+    failed = report.get("checks_failed", [])
+    strict = [r for r in rows if r["budget_frac"] == MIXED_STRICT_FRAC]
+    return {
+        "bench": "plan",
+        "source": os.path.join(ART, "BENCH_plan.json"),
+        "cells": len(rows),
+        "archs": report["archs"],
+        "budget_fracs": report["budget_fracs"],
+        "quality_mean": sum(r["quality"] for r in rows) / max(1, len(rows)),
+        "mixed_quality_mean": sum(r["mixed_quality"] for r in rows)
+        / max(1, len(rows)),
+        "parked_total": sum(r["parked"] + r["mixed_parked"] for r in rows),
+        "acceptance": {
+            "budget_respected": all(r["plan_bytes"] <= r["budget_bytes"]
+                                    and r["mixed_bytes"] <= r["budget_bytes"]
+                                    for r in rows),
+            "built_bytes_match": all(r["built_bytes"] == r["plan_bytes"]
+                                     and r["mixed_built_bytes_ok"]
+                                     for r in rows),
+            "beats_uniform_hash": all(r["quality"] > r["uniform_quality"]
+                                      for r in rows),
+            "mixed_strictly_beats_unidim": all(
+                r["mixed_quality"] > r["quality"] for r in strict)
+            and bool(strict),
+            "complementary": all(r["compositional_complementary"]
+                                 for r in rows),
+            "all_checks_passed": not failed,
+        },
+        "checks_failed": failed,
+    }
 
 
 def rows():
@@ -139,12 +237,17 @@ def rows():
         r = _plan_cell("dlrm-criteo", cfg, stats, frac, save=False)
         ok = (r["plan_bytes"] <= r["budget_bytes"]
               and r["quality"] > r["uniform_quality"]
+              and r["mixed_bytes"] <= r["budget_bytes"]
+              and r["mixed_built_bytes_ok"]
+              and r["mixed_quality"] >= r["quality"] - 1e-12
               and r["compositional_complementary"])
         name = f"plan/{r['arch']}/b{frac:g}" + ("" if ok else "/ERROR")
         out.append((name, r["solve_ms"] * 1e3,
                     f"quality={r['quality']:.4f};"
+                    f"mixed={r['mixed_quality']:.4f};"
                     f"uniform={r['uniform_quality']:.4f};"
-                    f"bytes={r['plan_bytes']}/{r['budget_bytes']}"))
+                    f"bytes={r['plan_bytes']}/{r['budget_bytes']};"
+                    f"parked={r['parked']}+{r['mixed_parked']}"))
     return out
 
 
@@ -159,6 +262,9 @@ def main(argv=None) -> int:
                     action="store_false", default=True,
                     help="skip writing the solved plans to artifacts/plans/")
     ap.add_argument("--out", default=os.path.join(ART, "BENCH_plan.json"))
+    ap.add_argument("--summary-out", default="BENCH_plan.json",
+                    help="compact top-level mirror (totals + acceptance "
+                         "booleans) for the perf-trajectory tooling")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -171,8 +277,11 @@ def main(argv=None) -> int:
         print(f"plan/{r['arch']}/b{r['budget_frac']:g},"
               f"{r['solve_ms'] * 1e3:.0f},"
               f"quality={r['quality']:.6f};"
+              f"mixed={r['mixed_quality']:.6f};"
               f"uniform={r['uniform_quality']:.6f};"
               f"bytes={r['plan_bytes']}/{r['budget_bytes']};"
+              f"parked={r['parked']}+{r['mixed_parked']};"
+              f"dims={'+'.join(f'{k}:{v}' for k, v in sorted(r['mixed_dims'].items(), key=lambda kv: int(kv[0])))};"
               f"kinds={'+'.join(f'{k}:{v}' for k, v in sorted(r['kinds'].items()))}")
         sys.stdout.flush()
     failures = check(report)
@@ -180,6 +289,8 @@ def main(argv=None) -> int:
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, default=float)
+    with open(args.summary_out, "w") as f:
+        json.dump(summarize(report), f, indent=1, default=float)
     for name, msg in failures:
         print(f"plan/check/{name}/ERROR,0,{msg}")
     if failures:

@@ -10,7 +10,10 @@ The from-plan path: ``spec`` may also be a ``repro.plan.MemoryPlan``
 (duck-typed via ``spec_for`` — no import cycle), in which case ``feature``
 selects the per-feature spec the planner solved for; the plan validates
 cardinality and embedding dim so a stale plan fails loudly instead of
-silently building un-scored tables.
+silently building un-scored tables.  Mixed-dimension plans additionally
+carry a per-feature table width (``plan.dim_for``): the module is built
+at that width (its ``out_dim`` reports it), and the models project each
+feature back to the interaction width ``dim``.
 """
 
 from __future__ import annotations
@@ -54,7 +57,13 @@ def make_embedding(num_categories: int, dim: int, spec: EmbeddingSpec,
         if feature is None:
             raise ValueError("building from a MemoryPlan requires feature=<i> "
                              "(the categorical feature index)")
-        spec = spec.spec_for(feature, num_categories=num_categories, dim=dim)
+        plan = spec
+        spec = plan.spec_for(feature, num_categories=num_categories, dim=dim)
+        width = plan.dim_for(feature) if hasattr(plan, "dim_for") else dim
+        if not 1 <= width <= dim:
+            raise ValueError(f"plan table {feature} has width {width} outside "
+                             f"[1, emb_dim={dim}] — regenerate the plan")
+        dim = width
     if spec.kind == "full" or num_categories <= max(spec.threshold, 1):
         return FullEmbedding(num_categories, dim, param_dtype)
     c = max(1, spec.num_collisions)

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import CompositionalEmbedding, EmbeddingSpec
-from .dlrm import _mlp_apply, _mlp_init, embed_features, tables_for
+from .dlrm import _mlp_apply, _mlp_init, embed_features, proj_init, tables_for
 
 __all__ = ["DCNConfig", "dcn_init", "dcn_forward", "dcn_loss_fn",
            "dcn_forward_from_features"]
@@ -55,12 +55,16 @@ def dcn_init(key, cfg: DCNConfig):
     ckeys = jax.random.split(kc, cfg.cross_layers)
     cross = [{"w": jax.random.normal(k, (d0,), cfg.pdtype) * (1.0 / d0) ** 0.5,
               "b": jnp.zeros((d0,), cfg.pdtype)} for k in ckeys]
-    return {
+    params = {
         "tables": [m.init(k) for m, k in zip(modules, ekeys)],
         "cross": cross,
         "deep": _mlp_init(kd, (d0,) + cfg.deep_mlp, cfg.pdtype),
         "out": _mlp_init(ko, (d0 + cfg.deep_mlp[-1], 1), cfg.pdtype),
     }
+    proj = proj_init(ekeys, modules, cfg)
+    if proj:  # mixed-dim plan: project narrow tables into the x0 width
+        params["proj"] = proj
+    return params
 
 
 def dcn_forward_from_features(params, dense_x, feats, cfg: DCNConfig):
@@ -80,7 +84,8 @@ def dcn_forward_from_features(params, dense_x, feats, cfg: DCNConfig):
 
 
 def dcn_forward(params, dense_x, sparse_idx, cfg: DCNConfig, mask=None):
-    feats = embed_features(params["tables"], sparse_idx, cfg, mask=mask)
+    feats = embed_features(params["tables"], sparse_idx, cfg, mask=mask,
+                           proj=params.get("proj"))
     return dcn_forward_from_features(params, dense_x, feats, cfg)
 
 

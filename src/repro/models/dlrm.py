@@ -24,7 +24,7 @@ from ..core import CompositionalEmbedding, EmbeddingSpec, bag_pool, make_embeddi
 from ..kernels import dlrm_interact, ops
 
 __all__ = ["DLRMConfig", "dlrm_init", "dlrm_forward", "dlrm_loss_fn",
-           "dlrm_num_params", "tables_for", "embed_features",
+           "dlrm_num_params", "tables_for", "embed_features", "proj_init",
            "dlrm_forward_from_features"]
 
 
@@ -61,6 +61,30 @@ def _feature_mode(cfg) -> bool:
     return cfg.embedding.kind == "feature"
 
 
+def proj_init(key, modules, cfg):
+    """Per-feature learned projections ``(d_i, D)`` for mixed-dimension
+    plans — only features whose table width differs from ``cfg.emb_dim``
+    get an entry (keyed by the feature index as a string), so uniform-dim
+    configs keep a byte-identical param tree (no ``"proj"`` key at all).
+    Keys are derived by ``fold_in`` from each feature's own table key, so
+    adding a projection never reshuffles any existing draw."""
+    out = {}
+    for i, (mod, k) in enumerate(zip(modules, key)):
+        d = mod.out_dim
+        if d != cfg.emb_dim:
+            pk = jax.random.fold_in(k, 7)
+            out[str(i)] = jax.random.normal(pk, (d, cfg.emb_dim),
+                                            cfg.pdtype) * (1.0 / d) ** 0.5
+    return out
+
+
+def _project(feat, proj, i):
+    """Map one feature into the interaction width (identity when the
+    table already is ``emb_dim`` wide — no entry, no matmul)."""
+    w = None if proj is None else proj.get(str(i))
+    return feat if w is None else feat @ w
+
+
 def _mlp_init(key, dims, param_dtype):
     keys = jax.random.split(key, len(dims) - 1)
     return [{"w": jax.random.normal(k, (i, o), param_dtype) * (2.0 / i) ** 0.5,
@@ -92,23 +116,33 @@ def dlrm_init(key, cfg: DLRMConfig):
     ekeys = jax.random.split(ke, len(modules))
     f = _num_features(cfg, modules)
     interact_dim = f * (f - 1) // 2 + cfg.emb_dim
-    return {
+    params = {
         "bottom": _mlp_init(kb, (cfg.dense_dim,) + cfg.bottom_mlp + (cfg.emb_dim,),
                             cfg.pdtype),
         "top": _mlp_init(kt, (interact_dim,) + cfg.top_mlp + (1,), cfg.pdtype),
         "tables": [m.init(k) for m, k in zip(modules, ekeys)],
     }
+    proj = proj_init(ekeys, modules, cfg)
+    if proj:  # mixed-dim plan: project narrow tables into the interaction
+        params["proj"] = proj
+    return params
 
 
-def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None):
+def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None,
+                   proj=None):
     """Per-feature pooled embedding list — the serving stack's embed stage.
 
     ``sparse_idx``: one-hot ``(B, F)`` or multi-hot ``(B, F, L)`` with
     ``mask (B, F, L)`` (``bag_pool`` conventions: masked slots contribute
-    nothing, so bucket padding is exact).  Tables may be dense or
+    nothing, so an empty bag — all-zero mask — pools to the exact zero
+    vector, and bucket padding is exact).  Tables may be dense or
     row-quantized (``serve.quantize``); the kernel path routes quantized
-    QR pairs through the fused int8-dequant gather.  Returns a list of
-    ``(B, D)`` features (feature mode expands per partition, one-hot only).
+    QR pairs through the fused int8-dequant gather.  ``proj`` is the
+    mixed-dimension projection dict (``params["proj"]``): features whose
+    table width differs from ``cfg.emb_dim`` are mapped through their
+    learned ``(d_i, D)`` projection — identity (no entry, no matmul) when
+    widths match.  Returns a list of ``(B, D)`` features (feature mode
+    expands per partition, one-hot only).
     """
     modules = tables_for(cfg) if modules is None else modules
     multihot = sparse_idx.ndim == 3
@@ -126,19 +160,21 @@ def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None):
                 raise NotImplementedError(
                     "feature-generation mode has no multi-hot serving path")
             if use_kernel and qr2:
-                feats.append(ops.qr_bag_lookup(idx, mk, tp["table_0"],
-                                               tp["table_1"], op=mod.op))
+                pooled = ops.qr_bag_lookup(idx, mk, tp["table_0"],
+                                           tp["table_1"], op=mod.op)
             else:
-                feats.append(bag_pool(mod, tp, idx, mk))
+                pooled = bag_pool(mod, tp, idx, mk)
+            feats.append(_project(pooled, proj, i))
             continue
         idx = sparse_idx[:, i]
         if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):
             feats.extend(mod.partition_embeddings(tp, idx))
         elif use_kernel and qr2:
-            feats.append(ops.qr_lookup(idx, tp["table_0"], tp["table_1"],
-                                       op=mod.op))
+            feats.append(_project(ops.qr_lookup(idx, tp["table_0"],
+                                                tp["table_1"], op=mod.op),
+                                  proj, i))
         else:
-            feats.append(mod.apply(tp, idx))
+            feats.append(_project(mod.apply(tp, idx), proj, i))
     return feats
 
 
@@ -161,7 +197,8 @@ def dlrm_forward_from_features(params, dense_x, feats, cfg: DLRMConfig):
 def dlrm_forward(params, dense_x, sparse_idx, cfg: DLRMConfig, mask=None):
     """dense_x: (B, 13) float; sparse_idx: (B, 26) int32 (or (B, 26, L)
     multi-hot with ``mask``) → logits (B,)."""
-    feats = embed_features(params["tables"], sparse_idx, cfg, mask=mask)
+    feats = embed_features(params["tables"], sparse_idx, cfg, mask=mask,
+                           proj=params.get("proj"))
     return dlrm_forward_from_features(params, dense_x, feats, cfg)
 
 
@@ -185,6 +222,8 @@ def dlrm_loss_fn(params, batch, cfg: DLRMConfig):
 def dlrm_num_params(cfg: DLRMConfig) -> int:
     modules = tables_for(cfg)
     n = sum(m.num_params for m in modules)
+    n += sum(m.out_dim * cfg.emb_dim for m in modules
+             if m.out_dim != cfg.emb_dim)  # mixed-dim projections
     dims_b = (cfg.dense_dim,) + cfg.bottom_mlp + (cfg.emb_dim,)
     f = _num_features(cfg, modules)
     dims_t = (f * (f - 1) // 2 + cfg.emb_dim,) + cfg.top_mlp + (1,)

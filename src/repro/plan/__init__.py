@@ -21,22 +21,27 @@ take ``--plan`` / ``--plan-budget-mb``, and ``benchmarks/plan_bench.py``
 sweeps budgets against the uniform-hashing control.
 """
 
-from .candidates import Candidate, candidate_specs, enumerate_candidates
+from .candidates import (Candidate, candidate_specs, dim_ladder,
+                         enumerate_candidates)
 from .freq import (FeatureStats, power_law_stats, stats_from_batches,
                    stats_from_criteo)
 from .memory_plan import PLAN_DIR, MemoryPlan, TablePlan, plan_path
 from .planner import (build_plan, full_table_bytes, plan_for_config,
                       uniform_hash_plan)
-from .quality import (module_partitions, partition_diagnostics,
-                      partition_entropy, proxy_loss, proxy_quality, sharing)
+from .quality import (dim_proxy_loss, dim_proxy_quality, fit_width_exponent,
+                      module_partitions, partition_diagnostics,
+                      partition_entropy, proxy_loss, proxy_quality,
+                      required_dim, sharing, width_factor)
 from .solver import InfeasibleBudget, concave_frontier, solve_budget
 
 __all__ = [
     "FeatureStats", "stats_from_batches", "stats_from_criteo",
     "power_law_stats",
-    "Candidate", "candidate_specs", "enumerate_candidates",
+    "Candidate", "candidate_specs", "enumerate_candidates", "dim_ladder",
     "proxy_loss", "proxy_quality", "sharing", "partition_entropy",
     "partition_diagnostics", "module_partitions",
+    "dim_proxy_loss", "dim_proxy_quality", "width_factor", "required_dim",
+    "fit_width_exponent",
     "concave_frontier", "solve_budget", "InfeasibleBudget",
     "TablePlan", "MemoryPlan", "PLAN_DIR", "plan_path",
     "build_plan", "uniform_hash_plan", "plan_for_config", "full_table_bytes",

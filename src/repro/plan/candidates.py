@@ -26,6 +26,12 @@ over the module's *physical* sub-tables ``(rows_j, width_j)`` (exact for
 * ``serve_bytes_int8`` — Σ rows_j · ``row_bytes(width_j, "int8")`` (the
   width+3 B/row post-training-quantized wire format) — the serve-time
   budget domain.
+
+**Mixed dimensions**: pass ``dims=dim_ladder(D)`` ({D/4, D/2, D}) to
+cross-product every spec with a width axis — each candidate is then built
+at its own ``dim`` and scored with the dim-aware proxy
+(``quality.dim_proxy_quality``), and the solver folds the cross-product
+into the same per-feature convex-hull frontier (still exact MCKP).
 """
 
 from __future__ import annotations
@@ -37,11 +43,11 @@ import jax.numpy as jnp
 from ..core.factory import EmbeddingSpec, _balanced_radices, make_embedding
 from ..serve.quantize import row_bytes
 from .freq import FeatureStats
-from .quality import module_partitions, proxy_quality
+from .quality import dim_proxy_quality, module_partitions
 
 __all__ = ["Candidate", "enumerate_candidates", "HASH_LADDER", "QR_LADDER",
            "MIXED_RADIX_KS", "candidate_specs", "candidate_for",
-           "module_tables", "bytes_per_row", "BYTE_DOMAINS"]
+           "module_tables", "bytes_per_row", "BYTE_DOMAINS", "dim_ladder"]
 
 BYTE_DOMAINS = ("train_f32", "serve_int8")
 
@@ -63,6 +69,13 @@ QR_LADDER = (2, 4, 8, 16, 32, 64, 128)
 MIXED_RADIX_KS = (2, 3)
 
 
+def dim_ladder(full_dim: int) -> tuple[int, ...]:
+    """The default mixed-dimension width ladder {D/4, D/2, D} — the second
+    knapsack axis the planner cross-products with the structural specs."""
+    return tuple(sorted({max(1, full_dim // 4), max(1, full_dim // 2),
+                         full_dim}))
+
+
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One scored configuration of one feature's table.
@@ -70,7 +83,9 @@ class Candidate:
     ``rows`` and both byte costs are derived from the *physical* tables
     the factory builds (``(rows_j, width_j)`` per partition), so they stay
     exact for ``op="concat"`` where sub-table widths are ``dim/k`` and
-    ``num_params`` is not a multiple of ``dim``.
+    ``num_params`` is not a multiple of ``dim``.  ``dim`` is the table's
+    *embedding width* — mixed-dimension plans carry a per-feature dim and
+    the models project back to the interaction width.
     """
 
     feature: int
@@ -80,15 +95,18 @@ class Candidate:
     train_bytes: int          # f32 training bytes: sum rows_j * width_j * 4
     serve_bytes_int8: int     # sum rows_j * row_bytes(width_j, "int8")
     quality: float
+    dim: int = 0              # embedding width this candidate was built at
 
     @property
     def label(self) -> str:
         s = self.spec
         if s.kind in ("hash", "qr"):
-            return f"{s.kind}/c{s.num_collisions}"
-        if s.kind == "mixed_radix":
-            return f"mr/{'x'.join(map(str, s.ms))}"
-        return s.kind
+            base = f"{s.kind}/c{s.num_collisions}"
+        elif s.kind == "mixed_radix":
+            base = f"mr/{'x'.join(map(str, s.ms))}"
+        else:
+            base = s.kind
+        return f"{base}@d{self.dim}" if self.dim else base
 
     def bytes(self, domain: str = "train_f32") -> int:
         if domain == "train_f32":
@@ -114,9 +132,12 @@ def module_tables(module) -> list[tuple[int, int]]:
 
 
 def candidate_for(feature: int, stats: FeatureStats, dim: int,
-                  spec: EmbeddingSpec, param_dtype=jnp.float32) -> Candidate:
+                  spec: EmbeddingSpec, param_dtype=jnp.float32,
+                  full_dim: int | None = None) -> Candidate:
     """Build + score one spec through the factory (the single source of
-    structure for cost, quality, and the eventual model)."""
+    structure for cost, quality, and the eventual model).  ``dim`` is the
+    width the table is built at; ``full_dim`` (default ``dim``) is the
+    model's interaction width the dim-aware proxy scores against."""
     module = make_embedding(stats.size, dim, spec, param_dtype)
     tables = module_tables(module)
     assert sum(r * w for r, w in tables) == module.num_params
@@ -125,7 +146,9 @@ def candidate_for(feature: int, stats: FeatureStats, dim: int,
         rows=sum(r for r, _ in tables),
         train_bytes=sum(r * w * 4 for r, w in tables),
         serve_bytes_int8=sum(r * row_bytes(w, "int8") for r, w in tables),
-        quality=proxy_quality(module_partitions(module), stats))
+        quality=dim_proxy_quality(module_partitions(module), stats,
+                                  dim, full_dim or dim),
+        dim=dim)
 
 
 def candidate_specs(n: int, *, op: str = "mult",
@@ -149,29 +172,43 @@ def candidate_specs(n: int, *, op: str = "mult",
 def enumerate_candidates(feature: int, stats: FeatureStats, dim: int, *,
                          op: str = "mult", param_dtype=jnp.float32,
                          extra_specs=(),
-                         bytes_domain: str = "train_f32") -> list[Candidate]:
+                         bytes_domain: str = "train_f32",
+                         dims: tuple[int, ...] | None = None
+                         ) -> list[Candidate]:
     """Score the spec ladder for one feature, deduplicated by cost in the
     *solve domain* (keep the best quality per distinct cost; drop configs
     costlier than full — two specs can tie on train bytes yet differ on
     serve-int8 bytes, so the dedup key must match the budget's domain).
     Always contains at least the one-row hash, so any global budget
-    >= F·D·4 bytes is satisfiable."""
+    >= F·D·4 bytes is satisfiable.
+
+    ``dims`` is the width axis: every spec is enumerated at every width
+    (default: ``(dim,)`` — the uniform-width ladder, byte-identical to the
+    pre-dim planner).  ``dim`` stays the model's interaction width the
+    dim-aware proxy scores against; a full-width full table is the only
+    quality-1 anchor, so the `full@D` cost cap applies across widths."""
     n = stats.size
+    widths = tuple(dims) if dims else (dim,)
+    if any(w < 1 or w > dim for w in widths):
+        raise ValueError(f"candidate widths {widths} must be in [1, {dim}]")
     full_cost = n * bytes_per_row(dim, bytes_domain)
     by_cost: dict[int, Candidate] = {}
 
-    def admit(spec):
-        cand = candidate_for(feature, stats, dim, spec, param_dtype)
+    def admit(spec, width):
+        cand = candidate_for(feature, stats, width, spec, param_dtype,
+                             full_dim=dim)
         cost = cand.bytes(bytes_domain)
-        if cand.spec.kind != "full" and cost >= full_cost:
-            return  # costs at least the full table: dominated
+        if cost >= full_cost and not (spec.kind == "full" and width == dim):
+            return  # costs at least the full@D table: dominated
         best = by_cost.get(cost)
         if best is None or cand.quality > best.quality:
             by_cost[cost] = cand
 
-    for spec in list(candidate_specs(n, op=op)) + list(extra_specs):
-        admit(spec)
+    for width in widths:
+        for spec in list(candidate_specs(n, op=op)) + list(extra_specs):
+            admit(spec, width)
     # guarantee a floor candidate (hash down to 1 row) for feasibility
-    if min(c.rows for c in by_cost.values()) > 1:
-        admit(EmbeddingSpec(kind="hash", num_collisions=max(2, n)))
+    if min(c.rows * c.dim for c in by_cost.values()) > min(widths):
+        admit(EmbeddingSpec(kind="hash", num_collisions=max(2, n)),
+              min(widths))
     return [by_cost[b] for b in sorted(by_cost)]

@@ -49,6 +49,7 @@ class TablePlan:
     quality: float = 1.0
     entropies: tuple[float, ...] = ()
     complementary: bool | None = None   # None: by-theorem, not brute-checked
+    dim: int = 0                    # table width; 0 = the plan's emb_dim
 
     def spec(self) -> EmbeddingSpec:
         return EmbeddingSpec(kind=self.kind, num_collisions=self.num_collisions,
@@ -81,6 +82,9 @@ class MemoryPlan:
     quality: float                  # mean per-feature proxy quality
     baseline_quality: float         # uniform hashing at the same budget
     tables: list[TablePlan] = dataclasses.field(default_factory=list)
+    # solver bookkeeping (parked upgrades, hull drops, leftover bytes —
+    # the "no silent caps" audit trail); free-form JSON-safe dict.
+    notes: dict = dataclasses.field(default_factory=dict)
 
     # models ask ``cfg.embedding.kind`` to detect feature-generation mode;
     # a plan is never that, so it reports its own kind.
@@ -113,6 +117,20 @@ class MemoryPlan:
                              f"model uses {dim} — regenerate the plan")
         return t.spec()
 
+    def dim_for(self, feature: int) -> int:
+        """The planned table width of ``feature`` — ``emb_dim`` unless the
+        planner chose a reduced (mixed-dimension) width.  The factory
+        builds the table at this width; the models project back to
+        ``emb_dim`` for the interaction."""
+        if not 0 <= feature < len(self.tables):
+            raise ValueError(f"plan for {self.arch!r} has "
+                             f"{len(self.tables)} tables, no feature {feature}")
+        return self.tables[feature].dim or self.emb_dim
+
+    @property
+    def table_dims(self) -> tuple[int, ...]:
+        return tuple(self.dim_for(i) for i in range(len(self.tables)))
+
     def validate_sizes(self, table_sizes) -> None:
         if tuple(table_sizes) != self.table_sizes:
             raise ValueError(
@@ -121,8 +139,11 @@ class MemoryPlan:
 
     def summary(self) -> dict:
         kinds: dict[str, int] = {}
+        dims: dict[int, int] = {}
         for t in self.tables:
             kinds[t.kind] = kinds.get(t.kind, 0) + 1
+            d = t.dim or self.emb_dim
+            dims[d] = dims.get(d, 0) + 1
         return {"arch": self.arch, "emb_dim": self.emb_dim,
                 "bytes_domain": self.bytes_domain,
                 "budget_bytes": self.budget_bytes,
@@ -131,7 +152,9 @@ class MemoryPlan:
                 if self.full_bytes else 0.0,
                 "quality": self.quality,
                 "baseline_quality": self.baseline_quality,
-                "kinds": kinds}
+                "kinds": kinds, "dims": {str(k): v for k, v
+                                         in sorted(dims.items())},
+                "parked": len(self.notes.get("parked", []))}
 
     def to_json(self) -> str:
         return json.dumps(
@@ -141,6 +164,7 @@ class MemoryPlan:
              "total_bytes": self.total_bytes, "full_bytes": self.full_bytes,
              "quality": self.quality,
              "baseline_quality": self.baseline_quality,
+             "notes": self.notes,
              "tables": [t.as_dict() for t in self.tables]}, indent=1)
 
     @classmethod
@@ -150,7 +174,7 @@ class MemoryPlan:
         if schema != SCHEMA_VERSION:
             raise ValueError(f"unsupported plan schema {schema}")
         tables = [TablePlan.from_dict(t) for t in d.pop("tables")]
-        return cls(tables=tables, **d)
+        return cls(tables=tables, notes=d.pop("notes", {}), **d)
 
     def save(self, path: str) -> str:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)

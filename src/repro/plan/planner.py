@@ -41,7 +41,8 @@ def _table_plan(cand: Candidate, stats: FeatureStats, dim: int) -> TablePlan:
     # the candidate already carries cost and quality from the factory-built
     # module; only the per-partition diagnostics remain to compute
     from ..core.factory import make_embedding
-    parts = module_partitions(make_embedding(cand.num_categories, dim,
+    width = cand.dim or dim
+    parts = module_partitions(make_embedding(cand.num_categories, width,
                                              cand.spec))
     s = cand.spec
     return TablePlan(
@@ -51,7 +52,8 @@ def _table_plan(cand: Candidate, stats: FeatureStats, dim: int) -> TablePlan:
         serve_bytes_int8=cand.serve_bytes_int8,
         quality=cand.quality,
         entropies=tuple(round(partition_entropy(p, stats), 6) for p in parts),
-        complementary=complementary_flag(parts, cand.num_categories))
+        complementary=complementary_flag(parts, cand.num_categories),
+        dim=width)
 
 
 def _mean_quality(tables) -> float:
@@ -59,7 +61,8 @@ def _mean_quality(tables) -> float:
 
 
 def _as_memory_plan(chosen: Sequence[Candidate], stats, dim, budget_bytes,
-                    arch, bytes_domain, baseline_quality) -> MemoryPlan:
+                    arch, bytes_domain, baseline_quality,
+                    notes: dict | None = None) -> MemoryPlan:
     tables = [_table_plan(c, st, dim) for c, st in zip(chosen, stats)]
     total = sum(c.bytes(bytes_domain) for c in chosen)
     return MemoryPlan(
@@ -68,33 +71,44 @@ def _as_memory_plan(chosen: Sequence[Candidate], stats, dim, budget_bytes,
         full_bytes=full_table_bytes([s.size for s in stats], dim,
                                     bytes_domain),
         quality=_mean_quality(tables),
-        baseline_quality=baseline_quality, tables=tables)
+        baseline_quality=baseline_quality, tables=tables,
+        notes=notes or {})
 
 
 def build_plan(stats: Sequence[FeatureStats], dim: int, budget_bytes: int, *,
                arch: str = "custom", bytes_domain: str = "train_f32",
                op: str = "mult",
-               baseline: MemoryPlan | None = None) -> MemoryPlan:
+               baseline: MemoryPlan | None = None,
+               dims: Sequence[int] | None = None) -> MemoryPlan:
     """Solve the budgeted allocation and emit an executable ``MemoryPlan``.
 
     ``baseline``: a ``uniform_hash_plan`` already solved for the same
     stats/budget/domain; omitted, one is scored internally (its mean
     quality fills ``baseline_quality``).
+
+    ``dims``: optional width ladder (e.g. ``dim_ladder(dim)`` = {D/4,
+    D/2, D}) — the mixed-dimension axis.  Default: uniform width ``dim``
+    (byte-identical to the pre-dim planner).  The emitted plan's
+    ``notes`` carry the solver's parked-upgrade / hull-drop audit trail.
     """
     ladders = [enumerate_candidates(f, st, dim, op=op,
-                                    bytes_domain=bytes_domain)
+                                    bytes_domain=bytes_domain,
+                                    dims=tuple(dims) if dims else None)
                for f, st in enumerate(stats)]
+    notes: dict = {}
     chosen = solve_budget(ladders, budget_bytes,
-                          lambda c: c.bytes(bytes_domain))
+                          lambda c: c.bytes(bytes_domain), notes=notes)
     total = sum(c.bytes(bytes_domain) for c in chosen)
     assert total <= budget_bytes, (total, budget_bytes)  # solver invariant
+    if dims:
+        notes["dim_ladder"] = sorted(set(int(d) for d in dims))
     if baseline is None:
         baseline_q = _mean_quality(_uniform_candidates(
             stats, dim, budget_bytes, bytes_domain))
     else:
         baseline_q = baseline.quality
     return _as_memory_plan(chosen, stats, dim, budget_bytes, arch,
-                           bytes_domain, baseline_q)
+                           bytes_domain, baseline_q, notes=notes)
 
 
 def _uniform_candidates(stats, dim, budget_bytes,
@@ -145,11 +159,13 @@ def uniform_hash_plan(stats: Sequence[FeatureStats], dim: int,
 def plan_for_config(cfg, budget_bytes: int, *, arch: str | None = None,
                     bytes_domain: str = "train_f32", num_batches: int = 32,
                     batch_size: int = 512, zipf: float = 1.5,
-                    noise: float = 0.5, seed: int = 0) -> MemoryPlan:
+                    noise: float = 0.5, seed: int = 0,
+                    dims: Sequence[int] | None = None) -> MemoryPlan:
     """Plan for a rec model config (``DLRMConfig`` / ``DCNConfig``):
     streams frequency stats from the synthetic Criteo generator at the
     config's table sizes (the same zipf the training configs use), then
-    solves at ``budget_bytes``."""
+    solves at ``budget_bytes``.  ``dims`` enables the mixed-dimension
+    width ladder (``build_plan`` docstring)."""
     from ..data.criteo import CriteoSpec
     spec = CriteoSpec(table_sizes=tuple(cfg.table_sizes), zipf=zipf,
                       noise=noise)
@@ -160,4 +176,4 @@ def plan_for_config(cfg, budget_bytes: int, *, arch: str | None = None,
         op = "mult"
     return build_plan(stats, cfg.emb_dim, budget_bytes,
                       arch=arch or getattr(cfg, "name", "custom"),
-                      bytes_domain=bytes_domain, op=op)
+                      bytes_domain=bytes_domain, op=op, dims=dims)

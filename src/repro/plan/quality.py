@@ -32,6 +32,26 @@ bucket entropy (how evenly traffic spreads over a table's rows — low
 entropy means the table wastes rows on cold buckets) and the
 code-uniqueness flag from ``is_complementary``; the bench and the plan
 JSON carry both.
+
+**Dim-aware scoring** (``dim_proxy_quality``): embedding *width* is the
+planner's second axis (Mixed Dimension Embeddings, Ginart et al. 2019 —
+the complement to the paper's row reduction).  Two effects, both concave
+in width:
+
+* **capacity** — a feature with traffic perplexity ``exp(H)`` needs
+  roughly ``log2(1+exp(H)) / BITS_PER_DIM`` dims to keep its effective
+  categories apart; width below that required dim discounts quality by
+  ``(dim/d_req)^DIM_BETA`` (skewed features have tiny perplexity, so
+  they shed width for free — the mixed-dim literature's core claim);
+* **sharing amplification** — a *shared* row that is also narrow has
+  less spare capacity to encode both traffics apart, so the sharing
+  loss is amplified by ``(full_dim/dim)^DIM_ALPHA``.
+
+At ``dim == full_dim`` both factors are exactly 1 and the score reduces
+to ``proxy_quality`` — uniform-width plans are byte-identical to the
+pre-dim planner.  The exponents are calibrated against the plan-bench
+budget sweep (``fit_width_exponent`` refits ``DIM_BETA`` from measured
+(width, quality) pairs when real sweep data is available).
 """
 
 from __future__ import annotations
@@ -49,11 +69,23 @@ from .freq import FeatureStats
 
 __all__ = ["module_partitions", "sharing", "proxy_loss", "proxy_quality",
            "partition_entropy", "partition_diagnostics",
-           "complementary_flag", "COMPLEMENTARY_CHECK_MAX"]
+           "complementary_flag", "COMPLEMENTARY_CHECK_MAX",
+           "required_dim", "width_factor", "dim_proxy_loss",
+           "dim_proxy_quality", "fit_width_exponent",
+           "DIM_ALPHA", "DIM_BETA", "BITS_PER_DIM"]
 
 # is_complementary is a brute-force O(size) scan; above this we trust the
 # constructors' by-theorem guarantee (paper appendix) instead of checking.
 COMPLEMENTARY_CHECK_MAX = 200_000
+
+# Width-model exponents (module docstring): DIM_ALPHA amplifies the
+# sharing loss of narrow rows, DIM_BETA discounts capacity below the
+# required dim, BITS_PER_DIM converts traffic perplexity to a required
+# width.  Calibrated against the plan_bench budget sweep; refit DIM_BETA
+# with ``fit_width_exponent`` when measured (width, quality) data exists.
+DIM_ALPHA = 0.5
+DIM_BETA = 0.5
+BITS_PER_DIM = 1.6
 
 
 def module_partitions(module) -> tuple[Partition, ...]:
@@ -106,6 +138,66 @@ def proxy_loss(partitions: Sequence[Partition], stats: FeatureStats) -> float:
 
 def proxy_quality(partitions: Sequence[Partition], stats: FeatureStats) -> float:
     return 1.0 - proxy_loss(partitions, stats)
+
+
+def required_dim(stats: FeatureStats) -> float:
+    """Width a feature needs before capacity stops binding:
+    ``log2(1 + exp(H)) / BITS_PER_DIM`` where ``exp(H)`` is the traffic
+    perplexity (effective category count).  A near-deterministic feature
+    (perplexity ~1) needs ~1 dim; a flat 2k-effective-category feature
+    needs the full deployment width."""
+    if not len(stats.ids):
+        return 1.0
+    p = stats.probs[stats.probs > 0]
+    perp = math.exp(float(-(p * np.log(p)).sum()))
+    return max(1.0, math.log2(1.0 + perp) / BITS_PER_DIM)
+
+
+def width_factor(dim: int, full_dim: int, stats: FeatureStats,
+                 beta: float = DIM_BETA) -> float:
+    """Concave capacity discount in [0, 1]: ``(dim/d_req)^beta`` below the
+    required dim, exactly 1 at ``dim >= min(full_dim, required_dim)`` —
+    so full-width candidates always score as the dim-unaware proxy."""
+    d_req = min(float(full_dim), required_dim(stats))
+    return min(1.0, float(dim) / d_req) ** beta
+
+
+def dim_proxy_loss(partitions: Sequence[Partition], stats: FeatureStats,
+                   dim: int, full_dim: int,
+                   alpha: float = DIM_ALPHA) -> float:
+    """Sharing loss amplified by ``(full_dim/dim)^alpha``: a narrow shared
+    row has less spare capacity to keep its foreign traffic apart."""
+    amp = (float(full_dim) / float(dim)) ** alpha
+    return min(1.0, proxy_loss(partitions, stats) * amp)
+
+
+def dim_proxy_quality(partitions: Sequence[Partition], stats: FeatureStats,
+                      dim: int, full_dim: int) -> float:
+    """Dim-aware quality (module docstring) — equals ``proxy_quality``
+    exactly at ``dim == full_dim``."""
+    return width_factor(dim, full_dim, stats) * (
+        1.0 - dim_proxy_loss(partitions, stats, dim, full_dim))
+
+
+def fit_width_exponent(samples: Sequence[tuple[float, float]]) -> float:
+    """Least-squares fit of the concave width exponent from measured
+    ``(width_ratio, quality_ratio)`` pairs (quality at reduced width over
+    quality at full width, both in (0, 1]): the ``beta`` minimizing
+    ``sum (log q - beta * log r)^2``.  This is the calibration hook the
+    module docstring promises — feed it the serve/plan sweep's measured
+    deltas to recalibrate ``DIM_BETA``."""
+    num = den = 0.0
+    for r, q in samples:
+        if not (0.0 < r <= 1.0 and 0.0 < q <= 1.0):
+            raise ValueError(f"ratios must be in (0, 1], got {(r, q)}")
+        if r == 1.0:
+            continue  # no width reduction: carries no exponent signal
+        lr, lq = math.log(r), math.log(q)
+        num += lr * lq
+        den += lr * lr
+    if den == 0.0:
+        raise ValueError("need at least one sample with width_ratio < 1")
+    return num / den
 
 
 def partition_entropy(partition: Partition, stats: FeatureStats) -> float:

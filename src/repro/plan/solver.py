@@ -64,10 +64,22 @@ def concave_frontier(cands: Sequence[Candidate],
 
 
 def solve_budget(ladders: Sequence[Sequence[Candidate]], budget: int,
-                 cost: Callable[[Candidate], int]) -> list[Candidate]:
+                 cost: Callable[[Candidate], int],
+                 notes: dict | None = None) -> list[Candidate]:
     """One candidate per feature, total cost <= budget, greedy-optimal
     quality (module docstring).  Raises ``InfeasibleBudget`` if even the
-    all-cheapest allocation overshoots."""
+    all-cheapest allocation overshoots.
+
+    ``notes`` (optional dict, filled in place) records what the solve
+    silently left on the table — the ROADMAP "no silent caps" rule:
+
+    * ``parked``        — one entry per feature whose next hull upgrade
+      did not fit the remaining budget (feature, the upgrade's label,
+      extra bytes it needed, quality it would have added);
+    * ``hull_dropped``  — ladder candidates not on any hull (dominated,
+      non-concave, or an equal-cost duplicate — never pickable);
+    * ``leftover_bytes`` — budget minus achieved bytes.
+    """
     fronts = [concave_frontier(l, cost) for l in ladders]
     if any(not f for f in fronts):
         raise ValueError("every feature needs at least one candidate")
@@ -89,6 +101,7 @@ def solve_budget(ladders: Sequence[Sequence[Candidate]], budget: int,
     heap: list = []
     for fi in range(len(fronts)):
         push(heap, fi)
+    parked: list[dict] = []
     # upgrades that momentarily don't fit are parked; a cheaper upgrade
     # elsewhere can't change their cost, but applying others never frees
     # bytes either — so parked entries stay parked (budget only shrinks).
@@ -97,8 +110,17 @@ def solve_budget(ladders: Sequence[Sequence[Candidate]], budget: int,
         if chosen[fi] != ci:  # stale entry (already upgraded past it)
             continue
         if spent + db > budget:
+            nxt = fronts[fi][ci + 1]
+            parked.append({"feature": nxt.feature, "upgrade": nxt.label,
+                           "extra_bytes": int(db),
+                           "dquality": nxt.quality - fronts[fi][ci].quality})
             continue  # park: this feature is done at this budget
         chosen[fi] = ci + 1
         spent += db
         push(heap, fi)
+    if notes is not None:
+        notes["parked"] = sorted(parked, key=lambda p: p["feature"])
+        notes["hull_dropped"] = sum(
+            len(l) - len(f) for l, f in zip(ladders, fronts))
+        notes["leftover_bytes"] = int(budget - spent)
     return [f[c] for f, c in zip(fronts, chosen)]

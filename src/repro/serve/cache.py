@@ -25,7 +25,11 @@ Design constraints (all pinned by tests):
   admission beyond either bound evicts per ``policy`` ("lru" or "lfu").
   A row bigger than the whole byte budget is *rejected* (counted in
   ``stats.rejections``) rather than flushing the cache for an inadmissible
-  key.
+  key.  If the rejected key was already resident (an oversized *refresh*),
+  the stale smaller value is dropped as an ``invalidate`` event counted in
+  ``stats.invalidations`` — **not** an eviction: ``stats.evictions`` and
+  ``evict`` events mean capacity pressure only, which is what keeps
+  ``replay()`` logs comparable across capacity configs.
 """
 
 from __future__ import annotations
@@ -44,9 +48,11 @@ POLICIES = ("lru", "lfu")
 class CacheStats:
     hits: int = 0
     misses: int = 0
-    evictions: int = 0
+    evictions: int = 0             # capacity-pressure removals only
     insertions: int = 0
     rejections: int = 0            # rows larger than the whole byte budget
+    # resident rows dropped by a rejected refresh (not capacity pressure)
+    invalidations: int = 0
     bytes_cached: int = 0
 
     @property
@@ -61,6 +67,7 @@ class CacheStats:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "insertions": self.insertions,
                 "rejections": self.rejections,
+                "invalidations": self.invalidations,
                 "bytes_cached": self.bytes_cached,
                 "lookups": self.lookups, "hit_rate": self.hit_rate}
 
@@ -124,13 +131,21 @@ class HotRowCache:
                    key=lambda k: (self._freq[k], self._used[k],
                                   self._inserted[k]))
 
-    def _remove(self, key: Hashable) -> None:
-        """Drop ``key`` with full eviction bookkeeping (stats + event)."""
+    def _remove(self, key: Hashable, kind: str = "evict") -> None:
+        """Drop ``key`` with full bookkeeping.  ``kind="evict"`` is a
+        capacity-pressure removal (counted in ``stats.evictions``);
+        ``kind="invalidate"`` is a rejection-driven removal of a stale
+        resident value (counted in ``stats.invalidations``) — keeping the
+        two apart keeps eviction counts honest and ``replay()`` event
+        logs unambiguous."""
         self.stats.bytes_cached -= self._rows[key].nbytes
         del self._rows[key], self._freq[key]
         del self._used[key], self._inserted[key]
-        self.stats.evictions += 1
-        self._event("evict", key)
+        if kind == "evict":
+            self.stats.evictions += 1
+        else:
+            self.stats.invalidations += 1
+        self._event(kind, key)
 
     def _evict_one(self, exclude: Hashable = None) -> None:
         self._remove(self._victim(exclude))
@@ -148,8 +163,10 @@ class HotRowCache:
             # beats flushing every resident row for a key we can't keep
             self.stats.rejections += 1
             self._event("reject", key)
-            if key in self._rows:  # the stale smaller value must not linger
-                self._remove(key)
+            if key in self._rows:  # the stale smaller value must not linger —
+                # dropped as an *invalidation*, not an eviction: nothing was
+                # squeezed out by capacity pressure
+                self._remove(key, kind="invalidate")
             return
         if key in self._rows:  # refresh in place (value update, not a use)
             self.stats.bytes_cached += row.nbytes - self._rows[key].nbytes

@@ -51,7 +51,8 @@ from ..optim.optimizers import leaf_paths
 
 __all__ = ["MODES", "TABLE_PATTERN", "quantize_table", "dequantize_rows",
            "dequantize_table", "is_quantized_table", "quantize_params",
-           "table_bytes", "memory_report", "paths_and_leaves", "row_bytes"]
+           "table_bytes", "table_shapes", "memory_report",
+           "paths_and_leaves", "row_bytes"]
 
 MODES = ("f32", "bf16", "int8")
 
@@ -167,13 +168,31 @@ def table_bytes(params, patterns: Sequence[str] = (TABLE_PATTERN,)) -> int:
                if is_quantized_table(leaf) or _match(path, patterns))
 
 
+def table_shapes(params, patterns: Sequence[str] = (TABLE_PATTERN,)
+                 ) -> list[tuple[str, int, int]]:
+    """``(path, rows, width)`` per table leaf — mixed-dimension plans give
+    every feature its own row width, and this is the report that makes the
+    per-table layout auditable (quantized dicts report their ``q`` shape)."""
+    out = []
+    for path, leaf in paths_and_leaves(params):
+        if is_quantized_table(leaf):
+            out.append((path, int(leaf["q"].shape[0]),
+                        int(leaf["q"].shape[1])))
+        elif getattr(leaf, "ndim", 0) == 2 and _match(path, patterns):
+            out.append((path, int(leaf.shape[0]), int(leaf.shape[1])))
+    return out
+
+
 def memory_report(params, qparams) -> dict:
     """Bytes vs f32 for the table leaves: the number the paper + serving
-    stack exist to shrink.  ``ratio`` is what the serve bench gates on."""
+    stack exist to shrink.  ``ratio`` is what the serve bench gates on;
+    ``table_dims`` is the distinct-row-width set (singleton for uniform
+    models, several entries under a mixed-dimension plan)."""
     base = table_bytes(params)
     quant = table_bytes(qparams)
     return {"f32_table_bytes": base, "quant_table_bytes": quant,
             "ratio": quant / base if base else 1.0,
+            "table_dims": sorted({w for _, _, w in table_shapes(params)}),
             "model_bytes_f32": sum(_leaf_bytes(l) for l in
                                    jax.tree.leaves(params)),
             "model_bytes_quant": sum(

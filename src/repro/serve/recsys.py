@@ -91,7 +91,8 @@ class RecsysEngine:
         dense_stage = _dense_stage_for(cfg)
 
         def full_fwd(params, dense, idx, mask):
-            feats = embed_features(params["tables"], idx, cfg, mask=mask)
+            feats = embed_features(params["tables"], idx, cfg, mask=mask,
+                                   proj=params.get("proj"))
             return dense_stage(params, dense, feats, cfg)
 
         self._full_fwd = jax.jit(full_fwd)
@@ -109,11 +110,13 @@ class RecsysEngine:
     # ------------------------------------------------------------- intake
 
     def submit(self, dense, bags: Sequence[Sequence[int]]) -> int:
+        """Queue one request.  Bags may be empty (legal in Criteo-style
+        traffic: a user with no history for that feature) — an empty bag
+        pools to the exact zero vector (its mask row is all zero, and the
+        ``bag_pool`` / cache paths both honor that)."""
         if len(bags) != len(self.modules):
             raise ValueError(f"expected {len(self.modules)} feature bags, "
                              f"got {len(bags)}")
-        if any(len(b) == 0 for b in bags):
-            raise ValueError("every feature needs at least one id")
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(RecRequest(
@@ -123,9 +126,13 @@ class RecsysEngine:
     # ------------------------------------------------------------- batching
 
     def _pad_wave(self, wave: list[RecRequest]):
-        """(dense (Bb, 13), idx (Bb, F, Lb) int32, mask (Bb, F, Lb) f32)."""
+        """(dense (Bb, 13), idx (Bb, F, Lb) int32, mask (Bb, F, Lb) f32).
+
+        ``Lb`` is at least 1 even for an all-empty wave (every bag empty):
+        the padded slots carry mask 0, so they pool to zero vectors."""
         f = len(self.modules)
-        lb = _next_pow2(max(len(b) for r in wave for b in r.bags))
+        lb = _next_pow2(max((len(b) for r in wave for b in r.bags),
+                            default=1) or 1)
         bb = min(_next_pow2(len(wave)), self.max_batch)
         dense = np.zeros((bb, wave[0].dense.shape[0]), np.float32)
         idx = np.zeros((bb, f, lb), np.int32)
@@ -156,13 +163,22 @@ class RecsysEngine:
         """Pooled features (Bb, F, D) via the hot-row cache.
 
         Cached unit: the *combined* (post-op, dequantized) f32 row per
-        (table, quotient, remainder).  Misses are computed in one gather
-        per feature over the unique missing ids and admitted.
+        (table, quotient, remainder), at the table's **own width** —
+        mixed-dimension plans cache narrow rows narrow, and the pooled
+        bag is projected into the interaction width afterwards (pooling
+        and projection are both linear, so pool-then-project matches the
+        jitted in-graph path).  An empty bag has no live slots and stays
+        the zero vector.  Misses are computed in one gather per feature
+        over the unique missing ids and admitted.
         """
         bb, f, lb = idx.shape
         d = self.cfg.emb_dim
+        proj = self.params.get("proj") if isinstance(self.params, dict) \
+            else None
         feats = np.zeros((bb, f, d), np.float32)
         for i, mod in enumerate(self.modules):
+            di = mod.out_dim
+            pooled = np.zeros((bb, di), np.float32)
             live = np.argwhere(mask[:, i, :] > 0)
             gids = [int(idx[b, i, l]) for b, l in live]
             keys = [self._row_key(i, g) for g in gids]
@@ -183,7 +199,10 @@ class RecsysEngine:
                     found[self._row_key(i, g)] = row
                     self.cache.put(self._row_key(i, g), row)
             for (b, l), key in zip(live, keys):
-                feats[b, i] += mask[b, i, l] * found[key]
+                pooled[b] += mask[b, i, l] * found[key]
+            w = None if proj is None else proj.get(str(i))
+            feats[:, i, :] = pooled if w is None \
+                else pooled @ np.asarray(w, np.float32)
         return feats
 
     # ------------------------------------------------------------- execution

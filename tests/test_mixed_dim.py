@@ -1,0 +1,229 @@
+"""Mixed-dimension planned embeddings end to end: factory width
+resolution, per-feature projections in DLRM/DCN, byte-identical uniform
+configs, training from a mixed plan, and quantized+cached serving."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EmbeddingSpec, make_embedding
+from repro.models.dcn import DCNConfig, dcn_forward, dcn_init
+from repro.models.dlrm import (DLRMConfig, dlrm_forward, dlrm_init,
+                               dlrm_num_params, embed_features, tables_for)
+from repro.plan import (build_plan, dim_ladder, full_table_bytes,
+                        power_law_stats)
+from repro.serve.cache import HotRowCache
+from repro.serve.quantize import memory_report, quantize_params, table_shapes
+from repro.serve.recsys import RecsysEngine
+
+SIZES = (100, 500, 33, 2000)
+DIM = 16
+
+
+def _mixed_plan(frac=0.25):
+    st = [power_law_stats(n, alpha=1.2) for n in SIZES]
+    return build_plan(st, DIM, int(full_table_bytes(SIZES, DIM) * frac),
+                      dims=dim_ladder(DIM), arch="test-mixed")
+
+
+def _cfg(plan):
+    return DLRMConfig(table_sizes=SIZES, emb_dim=DIM, bottom_mlp=(32, 16),
+                      top_mlp=(32,), embedding=plan)
+
+
+# ------------------------------------------------------------- factory
+
+
+def test_make_embedding_builds_at_planned_width():
+    plan = _mixed_plan()
+    assert len(set(plan.table_dims)) >= 2, plan.table_dims  # genuinely mixed
+    for i, n in enumerate(SIZES):
+        mod = make_embedding(n, DIM, plan, feature=i)
+        assert mod.out_dim == plan.dim_for(i)
+        assert mod.num_params * 4 == plan.tables[i].train_bytes
+
+
+def test_make_embedding_rejects_bad_plan_width():
+    plan = _mixed_plan()
+    bad = dataclasses.replace(plan.tables[0], dim=DIM + 4)
+    plan.tables[0] = bad
+    with pytest.raises(ValueError, match="width"):
+        make_embedding(SIZES[0], DIM, plan, feature=0)
+
+
+# ------------------------------------------------- byte-identical uniform path
+
+
+def test_uniform_config_params_byte_identical():
+    """The acceptance pin: a uniform-width config must produce exactly
+    the pre-mixed-dim param tree — no ``proj`` key, identical draws
+    (bottom/top from their own split keys, each table from its own
+    subkey), and identical forward outputs through the (now
+    projection-aware) embed path."""
+    from repro.models.dlrm import _mlp_init
+    cfg = DLRMConfig(table_sizes=SIZES, emb_dim=DIM, bottom_mlp=(32, 16),
+                     top_mlp=(32,),
+                     embedding=EmbeddingSpec(kind="qr", num_collisions=4,
+                                             threshold=40))
+    key = jax.random.PRNGKey(7)
+    params = dlrm_init(key, cfg)
+    assert set(params) == {"bottom", "top", "tables"}  # no proj key
+
+    # reconstruct the exact historical key schedule by hand
+    modules = tables_for(cfg)
+    kb, kt, ke = jax.random.split(key, 3)
+    ekeys = jax.random.split(ke, len(modules))
+    want_tables = [m.init(k) for m, k in zip(modules, ekeys)]
+    for got, want in zip(params["tables"], want_tables):
+        for name in want:
+            np.testing.assert_array_equal(np.asarray(got[name]),
+                                          np.asarray(want[name]))
+    want_bottom = _mlp_init(kb, (cfg.dense_dim,) + cfg.bottom_mlp
+                            + (cfg.emb_dim,), cfg.pdtype)
+    np.testing.assert_array_equal(np.asarray(params["bottom"][0]["w"]),
+                                  np.asarray(want_bottom[0]["w"]))
+
+    # forward: embed_features with proj=None is the identity path
+    idx = jnp.asarray(np.stack([np.arange(4) % s for s in SIZES], 1))
+    feats = embed_features(params["tables"], idx, cfg)
+    direct = [m.apply(p, idx[:, i]) for i, (m, p)
+              in enumerate(zip(modules, params["tables"]))]
+    for f, d in zip(feats, direct):
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(d))
+
+
+def test_uniform_width_plan_has_no_projections():
+    """A plan solved without the dim ladder keeps every table at emb_dim:
+    no proj entries, num_params matches the table sum exactly."""
+    st = [power_law_stats(n, alpha=1.2) for n in SIZES]
+    plan = build_plan(st, DIM, full_table_bytes(SIZES, DIM))
+    assert set(plan.table_dims) == {DIM}
+    params = dlrm_init(jax.random.PRNGKey(0), _cfg(plan))
+    assert "proj" not in params
+
+
+# ------------------------------------------------------------- models
+
+
+def test_mixed_dim_dlrm_forward_and_num_params():
+    plan = _mixed_plan()
+    cfg = _cfg(plan)
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    narrow = [i for i in range(len(SIZES)) if plan.dim_for(i) != DIM]
+    assert narrow, plan.table_dims
+    assert set(params["proj"]) == {str(i) for i in narrow}
+    for i in narrow:
+        assert params["proj"][str(i)].shape == (plan.dim_for(i), DIM)
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    assert total == dlrm_num_params(cfg)
+
+    B = 6
+    rng = np.random.default_rng(0)
+    sp = np.stack([rng.integers(0, s, B) for s in SIZES], 1).astype(np.int32)
+    logits = dlrm_forward(params, jnp.zeros((B, 13)), jnp.asarray(sp), cfg)
+    assert logits.shape == (B,) and np.isfinite(np.asarray(logits)).all()
+    # multi-hot with empty bags
+    idx = np.zeros((B, len(SIZES), 2), np.int32)
+    mask = np.zeros((B, len(SIZES), 2), np.float32)
+    idx[:, :, 0] = sp
+    mask[:, 0::2, 0] = 1.0  # half the features have empty bags
+    ml = dlrm_forward(params, jnp.zeros((B, 13)), jnp.asarray(idx), cfg,
+                      mask=jnp.asarray(mask))
+    assert np.isfinite(np.asarray(ml)).all()
+
+
+def test_mixed_dim_dcn_forward():
+    plan = _mixed_plan()
+    cfg = DCNConfig(table_sizes=SIZES, emb_dim=DIM, cross_layers=2,
+                    deep_mlp=(32, 16), embedding=plan)
+    params = dcn_init(jax.random.PRNGKey(1), cfg)
+    assert "proj" in params
+    B = 4
+    sp = np.stack([np.arange(B) % s for s in SIZES], 1).astype(np.int32)
+    logits = dcn_forward(params, jnp.zeros((B, 13)), jnp.asarray(sp), cfg)
+    assert logits.shape == (B,) and np.isfinite(np.asarray(logits)).all()
+
+
+def test_mixed_dim_dlrm_trains():
+    """One jitted train step from a mixed-dim plan config: gradients flow
+    through tables and projections alike."""
+    from repro.data.criteo import CriteoSpec, batch_at
+    from repro.models.dlrm import dlrm_loss_fn
+    from repro.optim.optimizers import adagrad
+    from repro.train.loop import init_state, make_train_step
+
+    plan = _mixed_plan()
+    cfg = _cfg(plan)
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    spec = CriteoSpec(table_sizes=SIZES, zipf=1.5, noise=0.5)
+    state = init_state(params, adagrad(1e-2))
+    step = jax.jit(make_train_step(lambda p, b: dlrm_loss_fn(p, b, cfg),
+                                   adagrad(1e-2)))
+    p0 = np.asarray(state["params"]["proj"][
+        sorted(state["params"]["proj"])[0]]).copy()
+    for i in range(3):
+        state, m = step(state, batch_at(0, i, 32, spec))
+        assert np.isfinite(float(m["loss"]))
+    p1 = np.asarray(state["params"]["proj"][
+        sorted(state["params"]["proj"])[0]])
+    assert not np.array_equal(p0, p1), "projection got no gradient"
+
+
+# ------------------------------------------------------------- serving
+
+
+def test_mixed_dim_quantize_report_and_shapes():
+    plan = _mixed_plan()
+    cfg = _cfg(plan)
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params)
+    rep = memory_report(params, qp)
+    assert rep["table_dims"] == sorted(set(plan.table_dims))
+    # quantized bytes equal the plan's serve_int8 domain exactly
+    assert rep["quant_table_bytes"] \
+        == sum(t.serve_bytes_int8 for t in plan.tables)
+    # projections stay f32 (they are not table leaves)
+    assert all(w.dtype == jnp.float32 for w in qp["proj"].values())
+    # shapes report per-table widths, dense and quantized alike
+    assert {w for _, _, w in table_shapes(params)} == set(plan.table_dims)
+    assert {w for _, _, w in table_shapes(qp)} == set(plan.table_dims)
+
+
+def test_mixed_dim_engine_cache_parity_empty_bags():
+    """The full serving acceptance: mixed-dim planned model, int8 tables,
+    cache on, request stream with empty bags — engine scores match the
+    jnp oracle, and the cache caches rows at per-feature widths."""
+    plan = _mixed_plan()
+    cfg = _cfg(plan)
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params)
+    rng = np.random.default_rng(5)
+    reqs = []
+    for r in range(12):
+        bags = [list(rng.integers(0, s, int(rng.integers(0, 3))))
+                for s in SIZES]
+        reqs.append((rng.normal(size=13), bags))
+    cache = HotRowCache(capacity_rows=512)
+    eng_c = RecsysEngine(cfg, qp, max_batch=4, cache=cache)
+    eng_n = RecsysEngine(cfg, qp, max_batch=4)
+    uids = [(eng_c.submit(d, b), eng_n.submit(d, b)) for d, b in reqs]
+    done_c, done_n = eng_c.run_until_drained(), eng_n.run_until_drained()
+    for (a, b), (dense, bags) in zip(uids, reqs):
+        lmax = max([len(bg) for bg in bags] + [1])
+        idx = np.zeros((1, len(bags), lmax), np.int32)
+        mask = np.zeros((1, len(bags), lmax), np.float32)
+        for i, bag in enumerate(bags):
+            idx[0, i, :len(bag)] = bag
+            mask[0, i, :len(bag)] = 1.0
+        want = float(dlrm_forward(qp, jnp.asarray(dense[None], jnp.float32),
+                                  jnp.asarray(idx), cfg,
+                                  mask=jnp.asarray(mask))[0])
+        assert abs(done_c[a].score - want) < 1e-3
+        assert abs(done_n[b].score - want) < 1e-3
+    # resident rows carry per-feature widths (cached pre-projection)
+    row_widths = {row.shape[0] for row in cache._rows.values()}
+    assert row_widths == {plan.dim_for(i) for i in range(len(SIZES))
+                          if any(len(bags[i]) for _, bags in reqs)}

@@ -19,14 +19,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
 from repro.core import make_embedding
 from repro.core.factory import EmbeddingSpec
 from repro.core.partitions import (RemainderPartition, is_complementary,
                                    qr_partitions)
-from repro.plan import (FeatureStats, InfeasibleBudget, MemoryPlan,
-                        build_plan, concave_frontier, enumerate_candidates,
-                        full_table_bytes, power_law_stats, proxy_loss,
-                        proxy_quality, stats_from_batches, uniform_hash_plan)
+from repro.plan import (Candidate, FeatureStats, InfeasibleBudget, MemoryPlan,
+                        build_plan, concave_frontier, dim_ladder,
+                        dim_proxy_quality, enumerate_candidates,
+                        fit_width_exponent, full_table_bytes,
+                        module_partitions, power_law_stats, proxy_loss,
+                        proxy_quality, required_dim, solve_budget,
+                        stats_from_batches, uniform_hash_plan, width_factor)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -88,6 +94,111 @@ def test_stats_from_batches_counts_and_multihot():
     np.testing.assert_allclose(s2[1].probs, [1.0])
 
 
+# ------------------------------------------------------------ dim-aware proxy
+
+
+def test_dim_quality_reduces_to_proxy_at_full_width():
+    """At dim == full_dim both width factors are exactly 1, so dim-aware
+    scoring equals the pre-dim proxy for every family."""
+    st_ = power_law_stats(500, alpha=1.2)
+    for spec in (EmbeddingSpec(kind="full"),
+                 EmbeddingSpec(kind="hash", num_collisions=8),
+                 EmbeddingSpec(kind="qr", num_collisions=4)):
+        parts = module_partitions(make_embedding(500, DIM, spec))
+        assert dim_proxy_quality(parts, st_, DIM, DIM) \
+            == proxy_quality(parts, st_)
+
+
+def test_dim_quality_monotone_and_concave_in_width():
+    st_ = power_law_stats(5000, alpha=1.1)
+    parts = module_partitions(
+        make_embedding(5000, DIM, EmbeddingSpec(kind="hash",
+                                                num_collisions=16)))
+    qs = [dim_proxy_quality(parts, st_, d, 16) for d in (2, 4, 8, 16)]
+    for a, b in zip(qs, qs[1:]):
+        assert b >= a                       # wider is never worse
+    gains = [b - a for a, b in zip(qs, qs[1:])]
+    for g1, g2 in zip(gains, gains[1:]):
+        assert g2 <= g1 + 1e-12             # concave: diminishing returns
+
+
+def test_required_dim_tracks_perplexity():
+    """A near-deterministic feature needs ~1 dim; flatter traffic needs
+    more — and the width factor is free at/above the required dim."""
+    peaked = FeatureStats(size=100, ids=np.arange(2),
+                          probs=np.array([0.999, 0.001]))
+    flat = FeatureStats(size=4096, ids=np.arange(4096),
+                        probs=np.full(4096, 1 / 4096))
+    assert required_dim(peaked) < 2 < required_dim(flat)
+    assert width_factor(4, 16, peaked) == 1.0     # 4 >= d_req: free
+    assert width_factor(4, 64, flat) < 1.0        # under-provisioned
+    assert width_factor(64, 64, flat) == 1.0      # full width never penalized
+
+
+def test_fit_width_exponent_recovers_beta():
+    beta = 0.37
+    samples = [(r, r ** beta) for r in (0.25, 0.5, 0.75, 1.0)]
+    assert abs(fit_width_exponent(samples) - beta) < 1e-9
+    with pytest.raises(ValueError):
+        fit_width_exponent([(1.0, 1.0)])          # no signal
+    with pytest.raises(ValueError):
+        fit_width_exponent([(2.0, 0.5)])          # ratios out of range
+
+
+def test_mixed_dim_strictly_beats_uniform_dim(stats):
+    """The tentpole acceptance, on the fixture stats: with the {D/4, D/2,
+    D} ladder the planner strictly beats its own uniform-width solve at
+    the 0.125x budget (and never falls below it), builds genuinely mixed
+    widths, and the byte claim survives the make_embedding round trip
+    per table."""
+    full = full_table_bytes(SIZES, DIM)
+    for frac in (0.05, 0.125, 0.25):
+        b = int(full * frac)
+        uni = build_plan(stats, DIM, b)
+        mix = build_plan(stats, DIM, b, dims=dim_ladder(DIM))
+        assert mix.quality >= uni.quality - 1e-12, frac
+        if frac == 0.125:
+            assert mix.quality > uni.quality
+            assert len(set(mix.table_dims)) >= 2, mix.table_dims
+        assert mix.total_bytes <= b
+        for i, (n, t) in enumerate(zip(SIZES, mix.tables)):
+            mod = make_embedding(n, DIM, mix, feature=i)
+            assert mod.num_params * 4 == t.train_bytes, (i, t)
+            assert mod.out_dim == (t.dim or DIM)
+
+
+def test_mixed_dim_plan_json_roundtrip(tmp_path, stats):
+    plan = build_plan(stats, DIM, full_table_bytes(SIZES, DIM) // 8,
+                      dims=dim_ladder(DIM), arch="mixed-rt")
+    path = plan.save(str(tmp_path / "mixed.json"))
+    loaded = MemoryPlan.load(path)
+    assert loaded.to_json() == plan.to_json()
+    assert loaded.table_dims == plan.table_dims
+    assert loaded.notes == plan.notes
+    n_loaded = sum(make_embedding(n, DIM, loaded, feature=i).num_params
+                   for i, n in enumerate(SIZES))
+    assert n_loaded * 4 == plan.total_bytes
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 10_000))
+def test_dim_aware_frontier_monotone_in_budget(alpha10, seed):
+    """Property: for random Zipf stats the dim-aware solve stays monotone
+    non-decreasing in budget (the solver invariant the hull construction
+    must preserve with the width cross-product folded in)."""
+    rng = np.random.default_rng(seed)
+    sizes = tuple(int(s) for s in rng.integers(3, 4000, size=4))
+    alpha = alpha10 / 10.0
+    sts = [power_law_stats(n, alpha=alpha) for n in sizes]
+    full = full_table_bytes(sizes, DIM)
+    qs = [build_plan(sts, DIM, max(int(full * f), len(sizes) * DIM),
+                     dims=dim_ladder(DIM)).quality
+          for f in (0.05, 0.1, 0.2, 0.4, 0.8, 1.0)]
+    for a, b in zip(qs, qs[1:]):
+        assert b >= a - 1e-12, (sizes, alpha, qs)
+    assert qs[-1] == 1.0
+
+
 # ------------------------------------------------------------ solver
 
 
@@ -107,6 +218,60 @@ def test_budget_never_exceeded(stats):
 def test_infeasible_budget_raises(stats):
     with pytest.raises(InfeasibleBudget):
         build_plan(stats, DIM, len(SIZES) * DIM * 4 - 1)  # below 1 row/table
+
+
+def test_infeasible_budget_message_names_floor(stats):
+    """The error must carry both numbers an operator needs: the budget
+    given and the floor allocation it missed."""
+    budget = len(SIZES) * DIM * 4 - 1
+    with pytest.raises(InfeasibleBudget) as ei:
+        build_plan(stats, DIM, budget)
+    msg = str(ei.value)
+    assert str(budget) in msg
+    assert "floor allocation" in msg and "cheapest" in msg
+    assert str(len(SIZES) * DIM * 4) in msg  # the actual floor, in bytes
+
+
+def test_single_candidate_ladders():
+    """Degenerate input: every ladder has exactly one point — the solve
+    must return it (no upgrades, nothing parked) or raise cleanly."""
+    def cand(feature, cost, q):
+        return Candidate(feature=feature, num_categories=10,
+                         spec=EmbeddingSpec(kind="full"), rows=cost // 4,
+                         train_bytes=cost, serve_bytes_int8=cost,
+                         quality=q, dim=DIM)
+    ladders = [[cand(0, 100, 0.5)], [cand(1, 60, 0.9)]]
+    notes = {}
+    chosen = solve_budget(ladders, 160, lambda c: c.train_bytes, notes=notes)
+    assert [c.feature for c in chosen] == [0, 1]
+    assert notes["parked"] == [] and notes["leftover_bytes"] == 0
+    with pytest.raises(InfeasibleBudget):
+        solve_budget(ladders, 159, lambda c: c.train_bytes)
+    with pytest.raises(ValueError, match="at least one candidate"):
+        solve_budget([[]], 100, lambda c: c.train_bytes)
+    # a single-candidate frontier is that candidate
+    assert concave_frontier([cand(0, 100, 0.5)],
+                            lambda c: c.train_bytes) == [cand(0, 100, 0.5)]
+
+
+def test_solver_notes_record_parked_upgrades():
+    """A ladder where parking must occur: feature 0 can upgrade (cheap),
+    feature 1's upgrade no longer fits — the solve reports it in notes
+    and the emitted MemoryPlan carries the audit trail."""
+    st_ = [power_law_stats(n, alpha=1.2) for n in (1000, 2000)]
+    full = full_table_bytes((1000, 2000), DIM)
+    # tight budget: something is always left mid-hull
+    plan = build_plan(st_, DIM, int(full * 0.04))
+    notes = plan.notes
+    assert "parked" in notes and "leftover_bytes" in notes
+    assert notes["hull_dropped"] >= 0
+    assert notes["parked"], "a 4% budget must park at least one upgrade"
+    for p in notes["parked"]:
+        assert set(p) == {"feature", "upgrade", "extra_bytes", "dquality"}
+        assert p["extra_bytes"] > notes["leftover_bytes"]  # truly didn't fit
+        assert p["dquality"] > 0
+    # full budget: nothing parked
+    assert build_plan(st_, DIM, full).notes["parked"] == []
 
 
 def test_quality_monotone_in_budget(stats):

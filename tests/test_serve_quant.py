@@ -270,6 +270,30 @@ def test_cache_bytes_only_capacity_and_oversized_reject():
         HotRowCache(capacity_rows=None, capacity_bytes=None)
 
 
+def test_cache_oversized_refresh_invalidates_not_evicts():
+    """A rejected oversized *refresh* of a resident key drops the stale
+    value as an invalidation — eviction counts stay capacity-pressure
+    only, and the event sequence is pinned."""
+    c = HotRowCache(capacity_rows=None, capacity_bytes=100,
+                    record_events=True)
+    small = np.ones(4, np.float32)         # 16 B
+    big = np.ones(64, np.float32)          # 256 B > whole budget
+    c.put("k", small)
+    c.put("other", small)
+    c.put("k", big)                        # oversized refresh of resident k
+    assert "k" not in c and "other" in c   # stale value gone, no flush
+    assert c.stats.rejections == 1
+    assert c.stats.invalidations == 1
+    assert c.stats.evictions == 0          # nothing was capacity-evicted
+    assert c.events == [("put", "k"), ("put", "other"),
+                        ("reject", "k"), ("invalidate", "k")]
+    assert c.stats.bytes_cached == small.nbytes
+    # a fresh oversized key is a plain rejection: no invalidation
+    c.put("new", big)
+    assert c.stats.rejections == 2 and c.stats.invalidations == 1
+    assert c.stats.as_dict()["invalidations"] == 1
+
+
 def test_cache_byte_budget_replay_deterministic():
     rng = np.random.default_rng(1)
     stream = [("t", int(k), int(k) % 5) for k in rng.integers(0, 30, 200)]
@@ -365,10 +389,63 @@ def test_engine_validates_requests():
     eng = RecsysEngine(cfg, params)
     with pytest.raises(ValueError):
         eng.submit(np.zeros(13), [[1], [2]])          # wrong feature count
-    with pytest.raises(ValueError):
-        eng.submit(np.zeros(13), [[1], [], [3]])      # empty bag
     with pytest.raises(NotImplementedError):
         RecsysEngine(_cfg(embedding=EmbeddingSpec(kind="feature")), params)
+
+
+def _oracle_score(params, cfg, dense, bags):
+    """Direct per-request jnp forward at exact shapes (empty bags padded
+    to one masked slot)."""
+    lmax = max([len(b) for b in bags] + [1])
+    idx = np.zeros((1, len(bags), lmax), np.int32)
+    mask = np.zeros((1, len(bags), lmax), np.float32)
+    for i, bag in enumerate(bags):
+        idx[0, i, :len(bag)] = bag
+        mask[0, i, :len(bag)] = 1.0
+    return float(dlrm_forward(params, jnp.asarray(dense[None], jnp.float32),
+                              jnp.asarray(idx), cfg,
+                              mask=jnp.asarray(mask))[0])
+
+
+def test_engine_empty_bags_match_oracle():
+    """Empty multi-hot bags are legal Criteo traffic: the pooled feature
+    must be the exact zero vector, end to end — mixed empty/non-empty
+    bags through the engine == the jnp oracle, quantized tables and the
+    hot-row cache both on (the acceptance path) and off."""
+    cfg = _cfg()
+    params = quantize_params(dlrm_init(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(3)
+    reqs = []
+    for r in range(10):
+        bags = [list(rng.integers(0, s, int(rng.integers(0, 3))))
+                for s in SIZES]           # 0 => empty bag
+        reqs.append((rng.normal(size=13), bags))
+    reqs.append((rng.normal(size=13), [[] for _ in SIZES]))  # all empty
+    reqs.append((rng.normal(size=13), [[1], [], [2]]))
+    for cache in (None, HotRowCache(capacity_rows=256)):
+        eng = RecsysEngine(cfg, params, max_batch=4, cache=cache)
+        uids = [eng.submit(d, b) for d, b in reqs]
+        done = eng.run_until_drained()
+        for uid, (dense, bags) in zip(uids, reqs):
+            want = _oracle_score(params, cfg, dense, bags)
+            assert abs(done[uid].score - want) < 1e-4, (uid, cache)
+
+
+def test_engine_all_empty_wave():
+    """A whole wave of all-empty requests (the `max()`-over-empty-bags
+    hardening in `_pad_wave`) serves, and its features are exactly the
+    zero vectors — scores equal the oracle's zero-feature forward."""
+    cfg = _cfg()
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    eng = RecsysEngine(cfg, params, max_batch=4)
+    rng = np.random.default_rng(4)
+    reqs = [(rng.normal(size=13), [[] for _ in SIZES]) for _ in range(5)]
+    uids = [eng.submit(d, b) for d, b in reqs]
+    done = eng.run_until_drained()
+    for uid, (dense, bags) in zip(uids, reqs):
+        want = _oracle_score(params, cfg, dense, bags)
+        assert abs(done[uid].score - want) < 1e-5
+    assert all(b[1] == 1 for b in eng.metrics()["buckets"])  # Lb floor = 1
 
 
 def test_engine_inference_placement_smoke():
