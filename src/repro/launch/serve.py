@@ -7,8 +7,10 @@ speaks the LM prefill/decode interface:
   KV-cache decode — exactly what ``decode_32k`` lowers in the dry-run);
 * ``rec``-family archs (DLRM/DCN) boot the microbatched ``RecsysEngine``
   over post-training-quantized tables (``--quantize {f32,bf16,int8}``)
-  with an optional hot-row cache (``--cache-rows N``), and report table
-  bytes, p50/p99 latency, QPS, and cache hit rate.
+  with an optional hot-row cache (``--cache-rows N``, device- or
+  host-resident via ``--cache-impl``) and continuous or lock-step wave
+  batching (``--batching``), and report table bytes, p50/p99 latency,
+  QPS, and cache hit rate.
 """
 
 import argparse
@@ -60,7 +62,7 @@ def _serve_lm(mod, args):
 def _serve_rec(mod, args):
     import numpy as np
 
-    from ..serve.cache import HotRowCache
+    from ..serve.cache import DeviceHotRowCache, HotRowCache
     from ..serve.quantize import memory_report, quantize_params
     from ..serve.recsys import RecsysEngine
     from .plan_cli import resolve_plan_args
@@ -88,11 +90,12 @@ def _serve_rec(mod, args):
     else:
         cache_rows = (args.cache_rows if args.cache_rows is not None
                       else (None if cache_bytes else 4096))
-        cache = HotRowCache(capacity_rows=cache_rows,
-                            capacity_bytes=cache_bytes)
+        cls = (DeviceHotRowCache if args.cache_impl == "device"
+               else HotRowCache)
+        cache = cls(capacity_rows=cache_rows, capacity_bytes=cache_bytes)
     mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
     engine = RecsysEngine(cfg, qparams, max_batch=args.batch_size,
-                          cache=cache, mesh=mesh)
+                          cache=cache, mesh=mesh, batching=args.batching)
 
     # Zipfian synthetic request stream (the criteo generator's skew)
     rng = np.random.default_rng(0)
@@ -137,6 +140,16 @@ def main():
     ap.add_argument("--cache-mb", type=float, default=None,
                     help="hot-row cache byte budget (admission stops at "
                          "this many MiB of resident f32 rows)")
+    ap.add_argument("--cache-impl", default="device",
+                    choices=["device", "host"],
+                    help="hot-row cache storage: 'device' keeps rows in "
+                         "HBM slabs with an in-graph slot-map probe (the "
+                         "fast path), 'host' is the PR 3 host-dict cache")
+    ap.add_argument("--batching", default="continuous",
+                    choices=["continuous", "waves"],
+                    help="'continuous' pipelines waves (dispatch ahead "
+                         "while earlier waves settle), 'waves' is the "
+                         "lock-step pow2 scheduler")
     ap.add_argument("--max-bag", type=int, default=4,
                     help="max multi-hot ids per categorical feature")
     from .plan_cli import add_plan_args

@@ -20,7 +20,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core import CompositionalEmbedding, EmbeddingSpec, bag_pool, make_embedding
+from ..core import (CompositionalEmbedding, EmbeddingSpec, FullEmbedding,
+                    HashEmbedding, bag_pool, make_embedding)
 from ..kernels import dlrm_interact, ops
 
 __all__ = ["DLRMConfig", "dlrm_init", "dlrm_forward", "dlrm_loss_fn",
@@ -159,12 +160,26 @@ def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None,
             if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):
                 raise NotImplementedError(
                     "feature-generation mode has no multi-hot serving path")
-            if use_kernel and qr2:
-                pooled = ops.qr_bag_lookup(idx, mk, tp["table_0"],
-                                           tp["table_1"], op=mod.op)
+            single = isinstance(mod, (FullEmbedding, HashEmbedding))
+            if use_kernel and (qr2 or single):
+                # serving hot path: fused gather (+dequant) → pool →
+                # projection in one VMEM pass (kernels/serve_path.py);
+                # single tables pre-fold (hash: idx mod m) so the kernel
+                # only ever sees in-range row ids
+                w = None if proj is None else proj.get(str(i))
+                if qr2:
+                    pooled = ops.serve_bag_pool(idx, mk, tp["table_0"],
+                                                tp["table_1"], op=mod.op,
+                                                proj=w)
+                else:
+                    fold = idx % mod.m if isinstance(mod, HashEmbedding) \
+                        else idx
+                    pooled = ops.serve_bag_pool(fold, mk, tp["table"],
+                                                proj=w)
+                feats.append(pooled)
             else:
                 pooled = bag_pool(mod, tp, idx, mk)
-            feats.append(_project(pooled, proj, i))
+                feats.append(_project(pooled, proj, i))
             continue
         idx = sparse_idx[:, i]
         if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):

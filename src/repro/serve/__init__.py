@@ -6,7 +6,7 @@
 * ``serve.recsys``   — microbatched quantized DLRM/DCN scoring engine.
 """
 
-from .cache import CacheStats, HotRowCache
+from .cache import CacheStats, DeviceHotRowCache, HotRowCache
 from .engine import Request, ServeEngine
 from .quantize import (dequantize_rows, dequantize_table, is_quantized_table,
                        memory_report, quantize_params, quantize_table,
@@ -15,7 +15,7 @@ from .recsys import RecRequest, RecsysEngine
 
 __all__ = [
     "Request", "ServeEngine",
-    "CacheStats", "HotRowCache",
+    "CacheStats", "HotRowCache", "DeviceHotRowCache",
     "quantize_table", "quantize_params", "dequantize_rows",
     "dequantize_table", "is_quantized_table", "table_bytes", "memory_report",
     "RecRequest", "RecsysEngine",

@@ -35,13 +35,20 @@ Design constraints (all pinned by tests):
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Iterable, Optional
+import functools
+from typing import Hashable, Iterable, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["CacheStats", "HotRowCache"]
+__all__ = ["CacheStats", "HotRowCache", "DeviceHotRowCache", "CachePinned"]
 
 POLICIES = ("lru", "lfu")
+
+
+class CachePinned(Exception):
+    """Admission needs an eviction but every resident row is pinned (the
+    engine pins this wave's hit rows so an in-flight device gather never
+    reads a reassigned slot).  The caller skips the admission."""
 
 
 @dataclasses.dataclass
@@ -90,10 +97,11 @@ class HotRowCache:
         self.stats = CacheStats()
         self.record_events = record_events
         self.events: list[tuple[str, Hashable]] = []
-        self._rows: dict[Hashable, np.ndarray] = {}
+        self._rows: dict[Hashable, object] = {}   # key -> stored entry
         self._freq: dict[Hashable, int] = {}
         self._used: dict[Hashable, int] = {}      # logical clock of last use
         self._inserted: dict[Hashable, int] = {}  # admission order
+        self._pinned: set = set()                 # exempt from eviction
         self._clock = 0
         self._admissions = 0
 
@@ -107,11 +115,29 @@ class HotRowCache:
         if self.record_events:
             self.events.append((kind, key))
 
+    # ---- storage hooks: the only seams DeviceHotRowCache overrides, so
+    # ---- policy/accounting/event semantics are shared (and the property
+    # ---- tests can assert host and device replay logs are identical)
+    def _coerce(self, row):
+        """Normalize an incoming row; ``.nbytes`` of the result is what the
+        byte budget charges."""
+        return np.asarray(row)
+
+    def _store(self, key, row) -> None:
+        """Bind ``row`` (already coerced) to ``key`` — insert or refresh."""
+        self._rows[key] = row
+
+    def _release(self, key) -> None:
+        """Storage-side teardown before ``key``'s bookkeeping is dropped."""
+
+    def _fetch(self, key):
+        """Materialize the stored row for a host-side ``get``."""
+        return self._rows[key]
+
     def get(self, key) -> Optional[np.ndarray]:
         """Row for ``key`` or None; counts the hit/miss and bumps recency."""
         self._clock += 1
-        row = self._rows.get(key)
-        if row is None:
+        if key not in self._rows:
             self.stats.misses += 1
             self._event("miss", key)
             return None
@@ -119,11 +145,13 @@ class HotRowCache:
         self._freq[key] += 1
         self._used[key] = self._clock
         self._event("hit", key)
-        return row
+        return self._fetch(key)
 
     def _victim(self, exclude: Hashable = None) -> Hashable:
-        pool = (self._rows if exclude is None or exclude not in self._rows
-                else [k for k in self._rows if k != exclude])
+        pool = [k for k in self._rows
+                if k != exclude and k not in self._pinned]
+        if not pool:
+            raise CachePinned(f"{len(self._pinned)} pinned, no victim")
         if self.policy == "lru":
             return min(pool, key=lambda k: self._used[k])
         # lfu: least frequency, ties by least recent use, then admission order
@@ -139,6 +167,7 @@ class HotRowCache:
         two apart keeps eviction counts honest and ``replay()`` event
         logs unambiguous."""
         self.stats.bytes_cached -= self._rows[key].nbytes
+        self._release(key)
         del self._rows[key], self._freq[key]
         del self._used[key], self._inserted[key]
         if kind == "evict":
@@ -157,7 +186,7 @@ class HotRowCache:
     def put(self, key, row) -> None:
         """Admit ``row`` under ``key``, evicting per policy when full —
         by row count and/or resident bytes, whichever binds first."""
-        row = np.asarray(row)
+        row = self._coerce(row)
         if self.capacity_bytes is not None and row.nbytes > self.capacity_bytes:
             # inadmissible: even an empty cache couldn't hold it; refusing
             # beats flushing every resident row for a key we can't keep
@@ -170,7 +199,7 @@ class HotRowCache:
             return
         if key in self._rows:  # refresh in place (value update, not a use)
             self.stats.bytes_cached += row.nbytes - self._rows[key].nbytes
-            self._rows[key] = row
+            self._store(key, row)
             # a grown refresh can push past the budget: shed other rows
             while self._over_bytes(0) and len(self._rows) > 1:
                 self._evict_one(exclude=key)
@@ -182,7 +211,7 @@ class HotRowCache:
             self._evict_one()
         self._clock += 1
         self._admissions += 1
-        self._rows[key] = row
+        self._store(key, row)
         self._freq[key] = 1
         self._used[key] = self._clock
         self._inserted[key] = self._admissions
@@ -231,3 +260,271 @@ class HotRowCache:
                 self.put(key, placeholder)
         self.record_events = was_recording
         return self.events[start:]
+
+
+# --------------------------------------------------------------------------
+# device-resident storage
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Bookkeeping record for one cached row living in a device slab.
+    ``nbytes`` mirrors the ``np.ndarray`` attribute so the base class's
+    byte accounting reads it without knowing rows moved off-host."""
+    width: int
+    slot: int
+    nbytes: int
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+@functools.cache
+def _scatter_fn():
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def scatter(slab, slots, rows):
+        return slab.at[slots].set(rows)
+
+    return scatter
+
+
+class DeviceHotRowCache(HotRowCache):
+    """``HotRowCache`` with rows resident in device memory.
+
+    Policy, accounting, and the event/replay contract are inherited
+    unchanged — only storage moves: rows live in one f32 slab per table
+    width (``(slots, d)`` jax arrays in HBM), admission/eviction stay
+    host-side over the same LFU/LRU bookkeeping, and writes batch into a
+    single donated in-place scatter per width per wave (``flush``), so the
+    hit path is a pure device gather — no per-row host transfer, ever.
+
+    The engine-facing batched API:
+
+    * ``lookup_many(keys, counts)`` → ``(slots, miss_mask)`` — slot ids
+      for resident keys (``-1`` for misses) with per-occurrence hit/miss
+      accounting (one ``hit``/``miss`` event per *unique* key);
+    * ``put_many(keys, rows, pinned=...)`` — admit computed miss rows,
+      never evicting a pinned (this wave's hit) key; returns the admitted
+      subset.  An admission that would require evicting a pinned row is
+      skipped and counted as a rejection;
+    * ``slab(width)`` / ``flush()`` — the gather target for the fused
+      serve kernel path.
+
+    Scalar ``get``/``put``/``replay`` still work (property tests assert
+    host and device caches produce identical replay logs); ``get``
+    flushes and copies the row back to host, so it is the compat path,
+    not the hot path.
+    """
+
+    def __init__(self, capacity_rows: Optional[int] = 4096,
+                 policy: str = "lfu", record_events: bool = False,
+                 capacity_bytes: Optional[int] = None):
+        super().__init__(capacity_rows=capacity_rows, policy=policy,
+                         record_events=record_events,
+                         capacity_bytes=capacity_bytes)
+        self._slabs: dict[int, object] = {}        # width -> (slots, d) f32
+        self._free: dict[int, list[int]] = {}      # width -> free slot ids
+        self._pending: dict[int, list] = {}        # width -> [(slot, row)]
+        # bumped whenever key->slot residency changes; the engine keeps a
+        # device-resident slot map and rebuilds it only when this moves
+        self.residency_version = 0
+
+    # ---- storage hooks ----------------------------------------------------
+    def _coerce(self, row):
+        import jax.numpy as jnp
+        row = jnp.asarray(row, jnp.float32)
+        return row.reshape(-1)
+
+    def _store(self, key, row) -> None:
+        d = int(row.shape[-1])
+        rec = self._rows.get(key)
+        if rec is not None and rec.width == d:
+            slot = rec.slot                        # refresh in place
+        else:
+            if rec is not None:                    # width changed: move
+                self._free[rec.width].append(rec.slot)
+            slot = self._alloc(d)
+        self._rows[key] = _Slot(d, slot, row.nbytes)
+        self._pending.setdefault(d, []).append((slot, row))
+        self.residency_version += 1
+
+    def _release(self, key) -> None:
+        rec = self._rows[key]
+        self._free.setdefault(rec.width, []).append(rec.slot)
+        self.residency_version += 1
+
+    def _fetch(self, key):
+        rec = self._rows[key]
+        self.flush()
+        return np.asarray(self._slabs[rec.width][rec.slot])
+
+    # ---- slab management --------------------------------------------------
+    def _max_rows(self, d: int) -> int:
+        caps = []
+        if self.capacity_rows is not None:
+            caps.append(self.capacity_rows)
+        if self.capacity_bytes is not None:
+            caps.append(max(1, self.capacity_bytes // (4 * d)))
+        return min(caps)
+
+    # Slabs whose full capacity fits under this row count are allocated
+    # at capacity up front: a stable slab shape means the jitted gather
+    # and donated scatter compile once per wave shape instead of once per
+    # (wave shape, slab size) pair — growth-triggered recompiles would
+    # otherwise leak ~100ms XLA compiles into steady-state serving.
+    _PREALLOC_ROWS = 1 << 20
+
+    def _grow(self, d: int) -> bool:
+        """Create or double the width-``d`` slab (capped by capacity);
+        returns False when already saturated."""
+        import jax.numpy as jnp
+        cur = self._slabs.get(d)
+        n = 0 if cur is None else cur.shape[0]
+        cap = self._max_rows(d)
+        grown = cap if cap <= self._PREALLOC_ROWS else min(cap, max(64, n * 2))
+        if grown <= n:
+            return False
+        slab = jnp.zeros((grown, d), jnp.float32)
+        if cur is not None:
+            slab = slab.at[:n].set(cur)
+        self._slabs[d] = slab
+        # descending so pop() hands out the lowest slot first
+        self._free.setdefault(d, []).extend(range(grown - 1, n - 1, -1))
+        return True
+
+    def _alloc(self, d: int) -> int:
+        free = self._free.setdefault(d, [])
+        while not free:
+            if self._grow(d):
+                continue
+            # slab saturated for this width (mixed-width byte budget):
+            # evict the policy victim *of this width* to free a slot
+            victims = [k for k, r in self._rows.items()
+                       if r.width == d and k not in self._pinned]
+            if not victims:
+                raise CachePinned(f"width-{d} slab saturated, all pinned")
+            if self.policy == "lru":
+                v = min(victims, key=lambda k: self._used[k])
+            else:
+                v = min(victims, key=lambda k: (self._freq[k],
+                                                self._used[k],
+                                                self._inserted[k]))
+            self._remove(v)
+        return free.pop()
+
+    def slab(self, d: int):
+        """The ``(slots, d)`` f32 device slab for width ``d`` (gather
+        target for slot ids from ``lookup_many``); created empty on first
+        touch so an all-empty wave can still gather (masked to zero)."""
+        if d not in self._slabs:
+            self._grow(d)
+        return self._slabs[d]
+
+    def slots_for(self, keys: Sequence[Hashable]) -> np.ndarray:
+        """Slot ids for resident ``keys`` (KeyError if any is missing —
+        the engine only calls this after pinning the whole wave)."""
+        return np.asarray([self._rows[k].slot for k in keys], np.int32)
+
+    def slot_items(self) -> tuple[np.ndarray, np.ndarray]:
+        """Every resident (key, slot) pair as two aligned arrays — the
+        bulk export the engine's device slot map is rebuilt from (keys
+        are the engine's packed int64s)."""
+        n = len(self._rows)
+        keys = np.fromiter(self._rows.keys(), np.int64, n)
+        slots = np.fromiter((rec.slot for rec in self._rows.values()),
+                            np.int64, n).astype(np.int32)
+        return keys, slots
+
+    def flush(self) -> None:
+        """Apply pending admissions as one donated scatter per width.
+
+        Slots are deduped last-write-wins (a slot freed by an eviction and
+        reused within the same wave must land the newer row), and the
+        scatter pads to the next pow2 by repeating the final pair so the
+        jit cache stays small."""
+        import jax.numpy as jnp
+        for d, writes in self._pending.items():
+            if not writes:
+                continue
+            dedup = {}
+            for slot, row in writes:
+                dedup[slot] = row
+            writes.clear()
+            slots = np.fromiter(dedup.keys(), np.int64, len(dedup))
+            rows = jnp.stack(list(dedup.values()))
+            pad = max(64, _next_pow2(len(dedup))) - len(dedup)
+            if pad:
+                slots = np.concatenate([slots, np.repeat(slots[-1:], pad)])
+                rows = jnp.concatenate(
+                    [rows, jnp.repeat(rows[-1:], pad, axis=0)])
+            self._slabs[d] = _scatter_fn()(
+                self._slabs[d], jnp.asarray(slots, jnp.int32), rows)
+
+    # ---- engine-facing batched API ---------------------------------------
+    def lookup_many(self, keys: Sequence[Hashable], counts=None):
+        """Slot ids for ``keys`` (``-1`` where missing) plus a miss mask.
+
+        ``counts`` carries per-key occurrence counts (the engine passes
+        ``np.unique`` counts) so hit/miss totals match the per-occurrence
+        accounting of the host cache's ``get_many``."""
+        n = len(keys)
+        cnts = [1] * n if counts is None else \
+            (counts.tolist() if hasattr(counts, "tolist") else list(counts))
+        slot_list = [-1] * n
+        miss_list = [False] * n
+        # this loop runs once per unique key per wave on the serving hot
+        # path — keep the body allocation-free and bind lookups to locals
+        rows_get = self._rows.get
+        freq, used = self._freq, self._used
+        record, events = self.record_events, self.events
+        clock = self._clock
+        hits = misses = 0
+        for i, key in enumerate(keys):
+            c = cnts[i]
+            clock += 1
+            rec = rows_get(key)
+            if rec is None:
+                misses += c
+                if record:
+                    events.append(("miss", key))
+                miss_list[i] = True
+            else:
+                hits += c
+                freq[key] += c
+                used[key] = clock
+                if record:
+                    events.append(("hit", key))
+                slot_list[i] = rec.slot
+        self._clock = clock
+        self.stats.hits += hits
+        self.stats.misses += misses
+        return np.asarray(slot_list, np.int32), np.asarray(miss_list, bool)
+
+    def put_many(self, keys: Sequence[Hashable], rows,
+                 pinned: Iterable[Hashable] = ()) -> list:
+        """Admit ``rows`` under ``keys`` without evicting ``pinned`` keys;
+        flushes, then returns the keys actually admitted (an admission that
+        could only proceed by evicting a pinned row is rejected)."""
+        self._pinned = set(pinned)
+        admitted = []
+        try:
+            for key, row in zip(keys, rows):
+                try:
+                    self.put(key, row)
+                except CachePinned:
+                    self.stats.rejections += 1
+                    self._event("reject", key)
+                    continue
+                if key in self._rows:
+                    admitted.append(key)
+        finally:
+            self._pinned = set()
+            # a pinned-blocked shed can leave the budget transiently over;
+            # restore the invariant now that pins are released
+            while self._over_bytes(0) and len(self._rows) > 1:
+                self._evict_one()
+        self.flush()
+        return admitted

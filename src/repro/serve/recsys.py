@@ -1,34 +1,43 @@
-"""Microbatched recsys inference engine over quantized compositional tables.
+"""Continuous-batching recsys inference engine over quantized tables.
 
 The LM path serves token waves (``serve.engine``); recommendation traffic
 is different: each request is *one* scoring call carrying 13 dense floats
 plus a variable-length multi-hot id bag per categorical feature.  The
 engine:
 
-* **queues** requests and drains them FIFO in microbatches of up to
-  ``max_batch``;
-* **pads + buckets** every microbatch to a fixed shape — batch and bag
-  length each round up to a power of two — so the number of distinct
-  compiled programs is ``O(log(max_batch) · log(max_bag))``: one jit per
-  ``(B, L)`` bucket, never one per request shape.  Padded bag slots carry
-  ``mask = 0`` (``bag_pool`` conventions: they contribute exactly nothing)
-  and padded batch rows are sliced off before scores are assigned;
-* runs the **quantized forward** (int8/bf16 tables via
-  ``serve.quantize``; the fused dequant kernel when ``cfg.use_kernel``)
-  with params placed under ``dist.INFERENCE_OVERRIDES`` when a mesh is
-  given — read-only weights keep tensor-parallel placements only, no FSDP
-  gather per step;
-* optionally serves hot rows from a **host-side cache**
-  (``serve.cache.HotRowCache``): the embed stage resolves each
-  ``(table, quotient, remainder)`` pair against the cache, computes only
-  the misses (dequantizing just those rows), pools on the host, and ships
-  the pooled features to the jitted dense stage
-  (``*_forward_from_features``);
-* tracks per-wave wall time → **p50/p99 latency and QPS** via
-  ``metrics()``.
+* **queues** requests and forms waves by **continuous batching**
+  (``batching="continuous"``, the default): the head request anchors the
+  wave's bag-length bucket and up to ``max_batch`` same-bucket requests
+  from a bounded lookahead window ride along, so one long-bag request no
+  longer drags every short request into its padded shape.  The head always
+  ships in the next wave — no starvation.  ``batching="waves"`` keeps the
+  legacy lock-step FIFO slices (and their exact wave/bucket accounting,
+  which the padding tests pin);
+* **pads + buckets** every wave to a fixed shape — batch and bag length
+  each round up to a power of two — so the number of distinct compiled
+  programs is ``O(log(max_batch) · log(max_bag))``.  Padded bag slots
+  carry ``mask = 0`` (``bag_pool`` conventions: they contribute exactly
+  nothing) and padded batch rows are sliced off before scores land;
+* **pipelines** waves: up to ``max_inflight`` dispatched programs ride
+  JAX's async dispatch before the engine blocks on the oldest, so host
+  wave-formation overlaps device execution (continuous mode only —
+  legacy mode reaps synchronously);
+* runs the **quantized forward** (int8/bf16 tables via ``serve.quantize``;
+  the fused serve kernel when ``cfg.use_kernel``) split into an embed
+  stage and a dense stage — both cache paths and the cache-off path feed
+  the *same* jitted dense executable, which is what makes cache-on/off
+  scores bit-comparable;
+* serves hot rows from the **hot-row cache** when given: a
+  ``DeviceHotRowCache`` keeps combined dequantized rows resident in
+  device slabs — the hit path is one packed ``np.unique`` on the host,
+  one slot-array build, and a single jitted gather→pool→project program;
+  only *miss* rows are ever computed from the tables.  A host
+  ``HotRowCache`` still works (rows pooled on host, compat path);
+* tracks per-wave dispatch→ready wall time → **p50/p99 latency and QPS**
+  via ``metrics()``.
 
 Deterministic given (params, request stream): no sampling, logical-clock
-cache, fixed bucket grid.
+cache, fixed bucket grid, sorted unique keys.
 """
 
 from __future__ import annotations
@@ -43,12 +52,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import CompositionalEmbedding, HashEmbedding
+from ..core.compositional import is_quantized_table
 from ..models.dcn import DCNConfig, dcn_forward_from_features
 from ..models.dlrm import (DLRMConfig, dlrm_forward_from_features,
                            embed_features, tables_for)
-from .cache import HotRowCache
+from .cache import DeviceHotRowCache, HotRowCache
 
-__all__ = ["RecRequest", "RecsysEngine"]
+__all__ = ["RecRequest", "RecsysEngine", "BATCHING_MODES"]
+
+BATCHING_MODES = ("continuous", "waves")
+
+_FEATURE_SHIFT = 44  # packed key: (feature << 44) | canonical row id
+# ceiling on the device slot map (int32 per cacheable row, 64 MiB):
+# configs whose total canonical id space exceeds it skip the in-graph
+# probe and use the exact host-side lookup instead
+_SLOT_MAP_ROWS_MAX = 1 << 24
 
 
 @dataclasses.dataclass
@@ -72,9 +90,22 @@ def _dense_stage_for(cfg):
     raise TypeError(f"no recsys serving path for config {type(cfg).__name__}")
 
 
+def _row_dtype(tp):
+    """Dtype of the combined row ``module.apply`` yields for this table's
+    params: f32 once any side is row-quantized (dequant widens), else the
+    stored table dtype — the slab forward casts its f32 pooled bag back to
+    this, mirroring ``bag_pool``."""
+    sub = tp.get("table", tp.get("table_0"))
+    return jnp.float32 if is_quantized_table(sub) else sub.dtype
+
+
 class RecsysEngine:
     def __init__(self, cfg, params, *, max_batch: int = 32,
-                 cache: Optional[HotRowCache] = None, mesh=None):
+                 cache: Optional[HotRowCache] = None, mesh=None,
+                 batching: str = "continuous", max_inflight: int = 2,
+                 lookahead: Optional[int] = None):
+        if batching not in BATCHING_MODES:
+            raise ValueError(f"batching={batching!r} not in {BATCHING_MODES}")
         self.cfg = cfg
         self.modules = tables_for(cfg)
         if cfg.embedding.kind == "feature":
@@ -82,6 +113,9 @@ class RecsysEngine:
                 "feature-generation mode has no serving path (F varies)")
         self.cache = cache
         self.max_batch = max_batch
+        self.batching = batching
+        self.max_inflight = max_inflight
+        self.lookahead = lookahead or 4 * max_batch
         if mesh is not None:
             # inference placement: same rules minus FSDP (read-only weights)
             from ..dist.sharding import INFERENCE_OVERRIDES, tree_shardings
@@ -90,15 +124,72 @@ class RecsysEngine:
         self.params = params
         dense_stage = _dense_stage_for(cfg)
 
-        def full_fwd(params, dense, idx, mask):
+        def embed_fwd(params, idx, mask):
             feats = embed_features(params["tables"], idx, cfg, mask=mask,
                                    proj=params.get("proj"))
-            return dense_stage(params, dense, feats, cfg)
+            return jnp.stack(feats, axis=1)
 
-        self._full_fwd = jax.jit(full_fwd)
+        # embed and dense stages jit separately: every path (cache off,
+        # host cache, device cache) funnels its (B, F, D) features through
+        # the *same* dense executable, so cache choice cannot perturb the
+        # dense math
+        self._embed_fwd = jax.jit(embed_fwd)
         self._dense_fwd = jax.jit(
             lambda params, dense, feats: dense_stage(params, dense, feats, cfg))
+
+        # device-slab forward: one program per (slot-shape, slab-shape)
+        # bucket — gather each feature's rows from its width's slab,
+        # mask-pool in f32 (bag_pool convention), project mixed-dim
+        # features into the interaction width
+        widths = tuple(sorted({mod.out_dim for mod in self.modules}))
+        w_index = {d: wi for wi, d in enumerate(widths)}
+        feat_width = tuple(mod.out_dim for mod in self.modules)
+        row_dtypes = tuple(_row_dtype(tp) for tp in params["tables"]) \
+            if isinstance(params, dict) else ()
+        self._widths = widths
+
+        def slab_fwd(proj, slabs, slots, mask):
+            feats = []
+            for i in range(len(feat_width)):
+                rows = jnp.take(slabs[w_index[feat_width[i]]],
+                                slots[:, i, :], axis=0)      # (B, L, d_i)
+                pooled = (rows * mask[:, i, :, None].astype(jnp.float32)
+                          ).sum(axis=1).astype(row_dtypes[i])
+                w = proj.get(str(i))
+                feats.append(pooled if w is None else pooled @ w)
+            return jnp.stack(feats, axis=1)
+
+        self._slab_fwd = jax.jit(slab_fwd)
+
+        # flat canonical-id layout for the device slot map: feature i's
+        # canonical rows occupy [offset_i, offset_i + space_i), so one
+        # int32 device array maps every cacheable row to its slab slot
+        # (-1 = not resident) and the hit path probes it in-graph
+        spaces = [mod.m if isinstance(mod, HashEmbedding) else size
+                  for mod, size in zip(self.modules, cfg.table_sizes)]
+        self._flat_offsets = np.concatenate(
+            [[0], np.cumsum(spaces)[:-1]]).astype(np.int64)
+        self._flat_total = int(sum(spaces))
+        self._slot_map = None
+        self._map_version = None
+
+        # canonicalization is part of the probe program: hash features
+        # fold mod m, QR/full ids are already < their space so the same
+        # modulus is a no-op for them (everything stays int32)
+        space_arr = jnp.asarray(spaces, jnp.int32)
+        off_arr = jnp.asarray(self._flat_offsets, jnp.int32)
+
+        def fast_fwd(smap, idx, mask, proj, slabs):
+            flat = idx % space_arr[None, :, None] + off_arr[None, :, None]
+            slots = jnp.take(smap, flat, axis=0)
+            nmiss = jnp.sum((slots < 0) & (mask > 0))
+            return slab_fwd(proj, slabs, slots, mask), nmiss
+
+        # probe + gather + pool + project in ONE program: the fast path
+        # costs the same number of dispatches as the in-graph embed
+        self._fast_fwd = jax.jit(fast_fwd)
         self._queue: deque[RecRequest] = deque()
+        self._inflight: deque[tuple] = deque()
         self._next_uid = 0
         self.completed: dict[int, RecRequest] = {}
         self.wave_latencies_s: list[float] = []
@@ -124,6 +215,39 @@ class RecsysEngine:
         return uid
 
     # ------------------------------------------------------------- batching
+
+    @staticmethod
+    def _bucket(r: RecRequest) -> int:
+        return _next_pow2(max((len(b) for b in r.bags), default=1) or 1)
+
+    def _form_wave(self) -> list[RecRequest]:
+        """Next wave off the queue.
+
+        Legacy mode: strict FIFO slice of up to ``max_batch``.  Continuous
+        mode: the head request anchors the bag-length bucket; up to
+        ``max_batch`` same-bucket requests within the first ``lookahead``
+        queued requests join it, everything else keeps its place — the
+        head always ships, so no request starves behind a hot bucket.
+        """
+        q = self._queue
+        if not q:
+            return []
+        if self.batching == "waves":
+            return [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        anchor = self._bucket(q[0])
+        wave: list[RecRequest] = []
+        skipped: list[RecRequest] = []
+        scanned = 0
+        while q and len(wave) < self.max_batch and scanned < self.lookahead:
+            r = q.popleft()
+            scanned += 1
+            if self._bucket(r) == anchor:
+                wave.append(r)
+            else:
+                skipped.append(r)
+        for r in reversed(skipped):
+            q.appendleft(r)
+        return wave
 
     def _pad_wave(self, wave: list[RecRequest]):
         """(dense (Bb, 13), idx (Bb, F, Lb) int32, mask (Bb, F, Lb) f32).
@@ -159,8 +283,148 @@ class RecsysEngine:
             return (feature, 0, gid % mod.m)
         return (feature, 0, gid)
 
+    def _canonical(self, idx: np.ndarray) -> np.ndarray:
+        """Fold raw ids (Bb, F, Lb) to canonical row ids per feature:
+        hash tables share rows mod m; QR/full ids are already 1:1 with
+        their (quotient, remainder) row, so the id itself canonicalizes."""
+        canon = np.empty(idx.shape, np.int64)
+        for i, mod in enumerate(self.modules):
+            col = idx[:, i, :].astype(np.int64)
+            canon[:, i, :] = col % mod.m if isinstance(mod, HashEmbedding) \
+                else col
+        return canon
+
+    def _compute_miss_rows(self, miss_keys: np.ndarray) -> list:
+        """Combined dequantized f32 rows for packed miss keys, one padded
+        gather per feature (``module.apply`` is elementwise per row, so
+        these rows are bit-identical to what the in-graph embed computes)."""
+        feats_of = (miss_keys >> _FEATURE_SHIFT).astype(np.int64)
+        gids = (miss_keys & ((1 << _FEATURE_SHIFT) - 1)).astype(np.int64)
+        rows_out: list = [None] * len(miss_keys)
+        for i in np.unique(feats_of):
+            sel = np.flatnonzero(feats_of == i)
+            ids = gids[sel]
+            # pad the fill-gather to a floored power of two: the number of
+            # distinct compiled gather shapes stays O(log) instead of one
+            # per count, and the floor keeps small miss waves from
+            # fragmenting into many tiny shape buckets
+            n_pad = max(32, _next_pow2(len(ids)))
+            padded = np.concatenate(
+                [ids, np.repeat(ids[-1:], n_pad - len(ids))])
+            rows = self.modules[int(i)].apply(
+                self.params["tables"][int(i)], jnp.asarray(padded, jnp.int32))
+            rows = jnp.asarray(rows, jnp.float32)
+            for j, pos in enumerate(sel):
+                rows_out[int(pos)] = rows[j]
+        return rows_out
+
+    def _sync_slot_map(self):
+        """Device slot map (flat canonical id -> slab slot, -1 = miss),
+        rebuilt from the cache's residency only when it changed — at a
+        steady hit rate this is a no-op and the hit path never touches a
+        Python dict."""
+        ver = self.cache.residency_version
+        if self._slot_map is None or ver != self._map_version:
+            smap = np.full(self._flat_total, -1, np.int32)
+            keys, slots = self.cache.slot_items()
+            if len(keys):
+                feats = keys >> _FEATURE_SHIFT
+                canon = keys & ((1 << _FEATURE_SHIFT) - 1)
+                smap[self._flat_offsets[feats] + canon] = slots
+            self._slot_map = jnp.asarray(smap)
+            self._map_version = ver
+        return self._slot_map
+
+    def _embed_device_fast(self, idx: np.ndarray, mask: np.ndarray):
+        """Speculative wave via the in-graph slot-map probe: fold ids,
+        probe the map, gather/pool/project from the slabs — all
+        dispatched asynchronously with **zero** per-key host work and no
+        host<->device sync.  Returns ``(feats, nmiss)`` where ``nmiss``
+        is a device scalar the caller checks *at reap time* (it is ready
+        by then): nonzero means some row was not resident, the
+        speculative features are garbage, and the wave is recomputed
+        through the exact path.  Returns ``None`` when the config's id
+        space is too big to map.
+
+        Dispatch order makes speculation safe: a later admission's
+        donated scatter executes after this wave's gathers, so the slabs
+        this program reads are exactly the slabs that were resident when
+        it was dispatched.
+
+        The fast path batches accounting: per-wave hit totals land in
+        ``stats`` but per-key LFU/LRU freshness is only refreshed by the
+        exact path (miss waves and ``record_events`` runs), so eviction
+        order under pressure leans on admission-time frequencies.  Runs
+        that need exact per-key accounting (the replay/property tests,
+        anything setting ``record_events=True``) always take the exact
+        path."""
+        if self._flat_total > _SLOT_MAP_ROWS_MAX:
+            return None
+        smap = self._sync_slot_map()
+        proj = self.params.get("proj") if isinstance(self.params, dict) \
+            else None
+        slabs = tuple(self.cache.slab(d) for d in self._widths)
+        return self._fast_fwd(smap, jnp.asarray(np.asarray(idx, np.int32)),
+                              jnp.asarray(mask), proj or {}, slabs)
+
+    def _embed_device(self, idx: np.ndarray, mask: np.ndarray):
+        """Wave features via the device-resident cache: one packed
+        ``np.unique`` over the wave's live (feature, row) keys, slot
+        lookups host-side, miss rows computed once and admitted through a
+        batched donated scatter, then a single jitted slab
+        gather→pool→project.  Rows never round-trip to the host.
+
+        This is the *exact* path: it performs full per-key accounting
+        (stats, LFU/LRU freshness, event log) with host semantics
+        identical to ``HotRowCache``.  ``_dispatch`` first tries the
+        speculative ``_embed_device_fast`` probe and only lands here for
+        miss waves, oversized id spaces, or ``record_events`` runs.
+
+        The whole wave's keys are pinned during admission so an in-wave
+        eviction can never reassign a slot the gather is about to read;
+        if admission is refused anyway (cache smaller than the wave's
+        working set), the wave falls back to the in-graph embed — same
+        bits, no cache."""
+        cache = self.cache
+        bb, f, lb = idx.shape
+        canon = self._canonical(idx)
+        packed = canon + (np.arange(f, dtype=np.int64)[None, :, None]
+                          << _FEATURE_SHIFT)
+        live = mask > 0
+        keys_live = packed[live]
+        if keys_live.size:
+            uniq, inv, counts = np.unique(
+                keys_live, return_inverse=True, return_counts=True)
+        else:
+            uniq = np.empty(0, np.int64)
+            inv = np.empty(0, np.int64)
+            counts = np.empty(0, np.int64)
+        key_list = uniq.tolist()
+        slots_u, miss_u = cache.lookup_many(key_list, counts)
+        if miss_u.any():
+            miss_keys = uniq[miss_u]
+            rows = self._compute_miss_rows(miss_keys)
+            admitted = cache.put_many(miss_keys.tolist(), rows,
+                                      pinned=key_list)
+            if len(admitted) != len(miss_keys):
+                # working set exceeds the pinnable capacity: serve this
+                # wave in-graph (identical math; stats already counted)
+                return self._embed_fwd(self.params, jnp.asarray(idx),
+                                       jnp.asarray(mask))
+            # hit slots survive admission (the whole wave is pinned, so
+            # no hit row was evicted): only the misses need re-resolving
+            slots_u[miss_u] = cache.slots_for(miss_keys.tolist())
+        slots = np.zeros((bb, f, lb), np.int32)
+        if key_list:
+            slots[live] = slots_u[inv]
+        slabs = tuple(cache.slab(d) for d in self._widths)
+        proj = self.params.get("proj") if isinstance(self.params, dict) \
+            else None
+        return self._slab_fwd(proj or {}, slabs, jnp.asarray(slots),
+                              jnp.asarray(mask))
+
     def _embed_cached(self, idx: np.ndarray, mask: np.ndarray) -> np.ndarray:
-        """Pooled features (Bb, F, D) via the hot-row cache.
+        """Pooled features (Bb, F, D) via the host hot-row cache.
 
         Cached unit: the *combined* (post-op, dequantized) f32 row per
         (table, quotient, remainder), at the table's **own width** —
@@ -187,11 +451,11 @@ class RecsysEngine:
                 miss_set = set(missing)
                 miss_gids = sorted({g for g, k in zip(gids, keys)
                                     if k in miss_set})
-                # pad the fill-gather to a power of two: the number of
-                # distinct compiled gather shapes stays O(log max_batch)
+                # pad the fill-gather to a floored power of two: the number
+                # of distinct compiled gather shapes stays O(log max_batch)
                 # instead of one per unique miss count
                 padded = miss_gids + [miss_gids[-1]] * \
-                    (_next_pow2(len(miss_gids)) - len(miss_gids))
+                    (max(32, _next_pow2(len(miss_gids))) - len(miss_gids))
                 rows = np.asarray(mod.apply(
                     self.params["tables"][i],
                     jnp.asarray(padded, jnp.int32)), np.float32)
@@ -207,24 +471,41 @@ class RecsysEngine:
 
     # ------------------------------------------------------------- execution
 
-    def step(self) -> list[RecRequest]:
-        """Score one microbatch; returns the finished requests."""
-        wave = [self._queue.popleft()
-                for _ in range(min(self.max_batch, len(self._queue)))]
-        if not wave:
-            return []
+    def _dispatch(self, wave: list[RecRequest]) -> None:
         dense, idx, mask = self._pad_wave(wave)
         t0 = time.monotonic()
-        if self.cache is not None:
-            feats = self._embed_cached(idx, mask)
-            logits = self._dense_fwd(self.params, jnp.asarray(dense),
-                                     jnp.asarray(feats))
+        check = None
+        if isinstance(self.cache, DeviceHotRowCache):
+            fast = None if self.cache.record_events \
+                else self._embed_device_fast(idx, mask)
+            if fast is not None:
+                feats, nmiss = fast
+                check = (dense, idx, mask, nmiss)
+            else:
+                feats = self._embed_device(idx, mask)
+        elif self.cache is not None:
+            feats = jnp.asarray(self._embed_cached(idx, mask))
         else:
-            logits = self._full_fwd(self.params, jnp.asarray(dense),
-                                    jnp.asarray(idx), jnp.asarray(mask))
+            feats = self._embed_fwd(self.params, jnp.asarray(idx),
+                                    jnp.asarray(mask))
+        logits = self._dense_fwd(self.params, jnp.asarray(dense), feats)
+        self._t_first = t0 if self._t_first is None else self._t_first
+        self._inflight.append((wave, logits, t0, check))
+
+    def _reap(self) -> list[RecRequest]:
+        wave, logits, t0, check = self._inflight.popleft()
+        if check is not None:
+            # settle the speculative probe: by reap time the async miss
+            # count has materialized, so this blocks on nothing extra
+            dense, idx, mask, nmiss = check
+            if int(nmiss):
+                feats = self._embed_device(idx, mask)   # exact: admit+count
+                logits = self._dense_fwd(self.params, jnp.asarray(dense),
+                                         feats)
+            else:
+                self.cache.stats.hits += int((mask > 0).sum())
         logits = np.asarray(jax.block_until_ready(logits), np.float32)
         t1 = time.monotonic()
-        self._t_first = t0 if self._t_first is None else self._t_first
         self._t_last = t1
         self.wave_latencies_s.append(t1 - t0)
         self.wave_sizes.append(len(wave))
@@ -234,8 +515,24 @@ class RecsysEngine:
             self.completed[r.uid] = r
         return wave
 
+    def step(self) -> list[RecRequest]:
+        """Form + dispatch one wave, reap what's due; returns finished
+        requests.  Legacy mode reaps synchronously (wave in, scores out);
+        continuous mode lets up to ``max_inflight`` waves ride JAX async
+        dispatch and only blocks on the oldest beyond that (or drains when
+        the queue is empty)."""
+        wave = self._form_wave()
+        if wave:
+            self._dispatch(wave)
+        limit = 0 if self.batching == "waves" else self.max_inflight
+        done: list[RecRequest] = []
+        while self._inflight and (len(self._inflight) > limit
+                                  or not self._queue):
+            done.extend(self._reap())
+        return done
+
     def run_until_drained(self) -> dict[int, RecRequest]:
-        while self._queue:
+        while self._queue or self._inflight:
             self.step()
         return self.completed
 
@@ -251,10 +548,12 @@ class RecsysEngine:
     def metrics(self) -> dict:
         lat = np.asarray(self.wave_latencies_s or [0.0])
         wall = ((self._t_last - self._t_first)
-                if self._t_first is not None else 0.0)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
         out = {
             "requests": int(sum(self.wave_sizes)),
             "waves": len(self.wave_sizes),
+            "batching": self.batching,
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "qps": (sum(self.wave_sizes) / wall) if wall > 0 else 0.0,

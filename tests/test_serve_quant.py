@@ -319,7 +319,9 @@ def test_engine_bucket_padding_is_exact():
     cfg = _cfg()
     params = dlrm_init(jax.random.PRNGKey(0), cfg)
     reqs = _requests(11)  # odd count -> batch padding in the last wave
-    eng = RecsysEngine(cfg, params, max_batch=4)
+    # legacy lock-step mode: FIFO slices make the wave/bucket accounting
+    # below exact (continuous batching groups by bag-length bucket instead)
+    eng = RecsysEngine(cfg, params, max_batch=4, batching="waves")
     uids = [eng.submit(d, b) for d, b in reqs]
     done = eng.run_until_drained()
     for uid, (dense, bags) in zip(uids, reqs):
