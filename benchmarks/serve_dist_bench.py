@@ -1,0 +1,309 @@
+"""Sharded-serving benchmark: plan-aware placement on an 8-device mesh.
+
+Runs the paper's DLRM (reduced Criteo config, deployment D=64) from a
+solved mixed-dimension memory plan, int8-quantized, through the sharded
+``RecsysEngine`` path on the 8-forced-host-device mesh
+(``dist.serve_placement``: replicate small sub-tables, row-shard big
+ones, fetch remote rows over the two-phase all-to-all exchange) and
+gates on four acceptance rows, ``/ERROR`` + exit 1 on any failure
+(``dist_bench`` contract):
+
+* **placement** — per-device table bytes under the placement stay within
+  the plan's even share plus the replication overhead the policy chose:
+  ``bytes/device <= plan_total/N + replicated + row-pad``; and the
+  placement annotation round-trips through the plan JSON;
+* **wire** — ``dist.accounting.serve_wave_wire_bytes`` (ring formulas)
+  equals the HLO analyzer's collective bytes for the *compiled* sharded
+  embed program **exactly** — static shapes, pure data movement, no
+  tolerance;
+* **parity** — sharded logits are **bit-identical** to a single-host
+  engine serving the same stream (cache off and cache on; the sharded
+  per-device program at batch ``B/N`` is the same XLA program as the
+  single-host wave at batch ``B/N``), with empty bags in the stream; the
+  cache lane must also see a positive hit rate;
+* **qps** — projected per-host throughput of the sharded engine beats
+  the single-host engine.  Host-device emulation timeshares all N
+  "devices" on one physical host, so the raw wall-clock measures N
+  devices' work serially; the projection divides wave wall time by N —
+  the per-host time a real N-host mesh would see — and is reported next
+  to the raw number, never in its place.
+
+Artifacts: ``artifacts/bench/BENCH_serve_dist.json`` + a compact
+top-level mirror (``BENCH_serve_dist.json``) + CSV on stdout
+(``name,us_per_call,derived``).
+
+Usage::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.serve_dist_bench --requests 512
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+ART = "artifacts/bench"
+PLAN_PATH = "artifacts/plans/serve_dist_plan.json"
+SERVE_EMB_DIM = 64
+PLAN_BUDGET = 1 << 20          # serve-int8 domain bytes for the plan
+MESH_DEVICES = 8
+MAX_BATCH = 256                # global; per-device bucket = 256/8 = 32
+MAX_BAG = 8
+
+
+def _requests(cfg, n: int, max_bag: int = MAX_BAG):
+    """Deterministic Zipfian multi-hot stream with **empty bags** (every
+    4th request drops one feature's bag) and the bag-length bucket pinned:
+    every 32-request block carries at least one ``max_bag``-length bag, so
+    the single-host engine's per-wave ``L`` bucket always equals the
+    sharded engine's global one and the parity row compares identical
+    program shapes."""
+    import numpy as np
+    f = len(cfg.table_sizes)
+    rng = np.random.default_rng(1234)
+    out = []
+    for r in range(n):
+        length = max_bag if r % 32 == 0 else 1 + (r * 7) % max_bag
+        dense = rng.normal(size=(13,)).astype(np.float32)
+        bags = [list(((rng.zipf(1.5, size=length) - 1) % s).astype(int))
+                for s in cfg.table_sizes]
+        if r % 4 == 1:
+            bags[r % f] = []   # legal empty bag -> exact zero-vector pool
+        out.append((dense, bags))
+    return out
+
+
+def _build():
+    import jax
+
+    from repro.configs import dlrm_criteo as mod
+    from repro.plan import plan_for_config
+    from repro.serve.quantize import quantize_params
+
+    base = dataclasses.replace(mod.config(reduced=True),
+                               emb_dim=SERVE_EMB_DIM)
+    plan = plan_for_config(base, PLAN_BUDGET, arch="dlrm-criteo",
+                           bytes_domain="serve_int8",
+                           dims=(SERVE_EMB_DIM // 4, SERVE_EMB_DIM // 2,
+                                 SERVE_EMB_DIM))
+    cfg = mod.config(reduced=True, plan=plan)
+    api = mod.api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    qparams = quantize_params(params, mode="int8")
+    return cfg, plan, params, qparams
+
+
+def _scores(engine, reqs):
+    import numpy as np
+    uids = [engine.submit(d, b) for d, b in reqs]
+    done = engine.run_until_drained()
+    return np.asarray([done[u].score for u in uids], np.float32)
+
+
+def _qps(engine, reqs, reps: int) -> float:
+    best = 0.0
+    for _ in range(reps + 1):          # first rep warms every bucket
+        engine.reset_metrics()
+        _scores(engine, reqs)
+        best = max(best, engine.metrics()["qps"])
+    return best
+
+
+def bench(requests: int, reps: int) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.dist.accounting import serve_wave_wire_bytes
+    from repro.dist.serve_placement import plan_placement
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.plan import MemoryPlan
+    from repro.serve.cache import DeviceHotRowCache
+    from repro.serve.quantize import memory_report
+    from repro.serve.recsys import RecsysEngine
+
+    n = MESH_DEVICES
+    if jax.device_count() < n:
+        raise RuntimeError(f"need {n} devices, have {jax.device_count()} "
+                           "(set XLA_FLAGS=--xla_force_host_platform_"
+                           f"device_count={n})")
+    cfg, plan, params, qparams = _build()
+    reqs = _requests(cfg, requests)
+
+    # ---- placement + plan annotation round-trip
+    placement = plan_placement(qparams, n, plan=plan)
+    plan.annotate_placement(placement)
+    plan.save(PLAN_PATH)
+    rt = MemoryPlan.load(PLAN_PATH).serve_placement()
+    rep = memory_report(params, qparams, placement=placement)
+    placement_row = {
+        **placement.summary(),
+        "plan_total_bytes": plan.total_bytes,
+        "bound_bytes": (plan.total_bytes // n + placement.replicated_bytes()
+                        + placement.pad_bytes()),
+        "table_bytes_per_device": rep["placement"]["table_bytes_per_device"],
+        "roundtrip_ok": rt is not None and rt.as_dict() == placement.as_dict(),
+    }
+
+    # ---- engines (sharded params are placed by the engine itself)
+    t0 = time.monotonic()
+    eng1 = RecsysEngine(cfg, qparams, max_batch=MAX_BATCH // n,
+                        batching="waves")
+    eng8 = RecsysEngine(cfg, qparams, max_batch=MAX_BATCH,
+                        batching="waves", mesh_devices=n,
+                        placement=placement)
+    eng8c = RecsysEngine(cfg, qparams, max_batch=MAX_BATCH,
+                         batching="waves", mesh_devices=n,
+                         placement=placement,
+                         cache=DeviceHotRowCache(capacity_rows=1 << 15))
+
+    # ---- wire bytes: accounted vs compiled HLO, exact
+    bb, lb = MAX_BATCH, MAX_BAG
+    f = len(cfg.table_sizes)
+    idx = jax.numpy.zeros((bb, f, lb), jax.numpy.int32)
+    mask = jax.numpy.zeros((bb, f, lb), jax.numpy.float32)
+    compiled = eng8._sharded_embed.lower(eng8.params, idx, mask).compile()
+    cost = analyze_hlo(compiled.as_text(), total_devices=n)
+    acct = serve_wave_wire_bytes(placement, bb // n, lb)
+    wire_row = {
+        "wire_bytes": acct["total_bytes"],
+        "hlo_wire_bytes": cost.collective_bytes,
+        "hlo_collectives": cost.collectives,
+        "lookups_per_device": acct["lookups_per_device"],
+        "sharded_sub_tables": len(placement.sharded),
+    }
+
+    # ---- parity: bit-identical logits, cache off and on
+    s1 = _scores(eng1, reqs)
+    s8 = _scores(eng8, reqs)
+    _scores(eng8c, reqs)               # warm pass fills the cache
+    s8c = _scores(eng8c, reqs)
+    hit_rate = eng8c.metrics()["cache"]["hit_rate"]
+    parity_row = {
+        "bitwise": bool(np.array_equal(s1, s8)),
+        "bitwise_cache": bool(np.array_equal(s1, s8c)),
+        "maxdiff": float(np.abs(s1 - s8).max()),
+        "maxdiff_cache": float(np.abs(s1 - s8c).max()),
+        "cache_hit_rate": float(hit_rate),
+        "requests": requests,
+    }
+    setup_s = time.monotonic() - t0
+
+    # ---- throughput: raw + per-host projection
+    qps1 = _qps(RecsysEngine(cfg, qparams, max_batch=MAX_BATCH), reqs, reps)
+    eng8q = RecsysEngine(cfg, qparams, max_batch=MAX_BATCH, mesh_devices=n,
+                         placement=placement)
+    qps8_raw = _qps(eng8q, reqs, reps)
+    qps_row = {"qps_1dev": qps1, "qps_8dev_raw": qps8_raw,
+               "qps_8dev_projected": qps8_raw * n, "projection_factor": n,
+               "emulated": True}
+
+    return {"arch": "dlrm-criteo(reduced,plan)", "devices": n,
+            "max_batch": MAX_BATCH, "max_bag": MAX_BAG,
+            "setup_s": round(setup_s, 2),
+            "placement": placement_row, "wire": wire_row,
+            "parity": parity_row, "qps": qps_row}
+
+
+def check(report: dict) -> list[tuple[str, str]]:
+    """(name, message) per failed acceptance check; empty = all green."""
+    failures = []
+    p = report["placement"]
+    if p["table_bytes_per_device"] > p["bound_bytes"]:
+        failures.append(("placement",
+                         f"{p['table_bytes_per_device']} B/device exceeds "
+                         f"plan_total/N + replication = {p['bound_bytes']}"))
+    if not p["roundtrip_ok"]:
+        failures.append(("placement",
+                         "placement annotation did not round-trip through "
+                         "the plan JSON"))
+    w = report["wire"]
+    if w["sharded_sub_tables"] == 0:
+        failures.append(("wire", "placement sharded nothing — the exchange "
+                                 "path was never exercised"))
+    if abs(w["wire_bytes"] - w["hlo_wire_bytes"]) > 0.5:
+        failures.append(("wire",
+                         f"accounted {w['wire_bytes']:.0f} != HLO "
+                         f"{w['hlo_wire_bytes']:.0f} (exact match required)"))
+    par = report["parity"]
+    if not par["bitwise"]:
+        failures.append(("parity", f"sharded logits differ from single-host "
+                                   f"by {par['maxdiff']:.3e}"))
+    if not par["bitwise_cache"]:
+        failures.append(("parity", f"cache-on sharded logits differ "
+                                   f"by {par['maxdiff_cache']:.3e}"))
+    if not par["cache_hit_rate"] > 0:
+        failures.append(("parity", "sharded device cache saw no hits"))
+    q = report["qps"]
+    if q["qps_8dev_projected"] < q["qps_1dev"]:
+        failures.append(("qps",
+                         f"projected {q['qps_8dev_projected']:.0f} qps on "
+                         f"{MESH_DEVICES} devices < single-host "
+                         f"{q['qps_1dev']:.0f}"))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--reps", type=int, default=2,
+                    help="timed reps per QPS lane (best-of, after warm)")
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_serve_dist.json"))
+    ap.add_argument("--mirror", default="BENCH_serve_dist.json",
+                    help="compact top-level mirror (totals + acceptance "
+                         "booleans)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    try:
+        report = bench(args.requests, args.reps)
+    except Exception as e:
+        print(f"serve_dist_bench/ERROR,0,{repr(e)[:160]}")
+        return 1
+    p, w = report["placement"], report["wire"]
+    par, q = report["parity"], report["qps"]
+    print(f"serve_dist/placement,0,bytes_per_device="
+          f"{p['table_bytes_per_device']};bound={p['bound_bytes']};"
+          f"sharded={p['row_sharded']};replicated={p['replicated']}")
+    print(f"serve_dist/wire,0,acct={w['wire_bytes']:.0f};"
+          f"hlo={w['hlo_wire_bytes']:.0f}")
+    print(f"serve_dist/parity,0,bitwise={int(par['bitwise'])};"
+          f"bitwise_cache={int(par['bitwise_cache'])};"
+          f"hit_rate={par['cache_hit_rate']:.3f}")
+    print(f"serve_dist/qps,0,qps1={q['qps_1dev']:.1f};"
+          f"qps8_raw={q['qps_8dev_raw']:.1f};"
+          f"qps8_proj={q['qps_8dev_projected']:.1f}")
+    failures = check(report)
+    report["checks_failed"] = [f"{n}: {m}" for n, m in failures]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=1, default=float)
+    if args.mirror:
+        mirror = {"devices": report["devices"],
+                  "bytes_per_device": p["table_bytes_per_device"],
+                  "wire_bytes": w["wire_bytes"],
+                  "parity_bitwise": par["bitwise"],
+                  "parity_bitwise_cache": par["bitwise_cache"],
+                  "qps_1dev": q["qps_1dev"],
+                  "qps_8dev_projected": q["qps_8dev_projected"],
+                  "checks_failed": report["checks_failed"]}
+        with open(args.mirror, "w") as fh:
+            json.dump(mirror, fh, indent=1, default=float)
+    for name, msg in failures:
+        print(f"serve_dist/check/{name}/ERROR,0,{msg}")
+    if failures:
+        print(f"# {len(failures)} serve_dist_bench check(s) failed",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,134 @@
+"""Markdown digest of every ``artifacts/bench/BENCH_*.json``.
+
+Renders one section per bench artifact — pass/fail status from its
+``checks_failed`` list, the headline scalars (QPS, p99, wire/table
+bytes, ratios, parity booleans), and a compact table for row-shaped
+reports — as GitHub-flavored markdown on stdout.  The CI bench-smoke
+lane appends it to ``$GITHUB_STEP_SUMMARY`` so a PR's bench numbers are
+readable without downloading artifacts.
+
+Tolerant by design: a missing directory, a missing file, or malformed
+JSON becomes a note in the output, never an exception — the summary
+step must not mask the real bench failure signal.
+
+Usage::
+
+    python -m benchmarks.summary_md [--dir artifacts/bench] \
+        >> "$GITHUB_STEP_SUMMARY"
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# headline scalar keys, in display order, picked up wherever they appear
+# at the top level of a report (or one level down in a sub-dict)
+_HEADLINE = ("qps", "qps_max", "qps_1dev", "qps_8dev_projected", "p50_ms",
+             "p99_ms", "wire_bytes", "hlo_wire_bytes", "bytes_per_device",
+             "table_bytes_per_device", "bytes_ratio", "ratio",
+             "int8_vs_none_ratio", "parity_bitwise", "parity_bitwise_cache",
+             "bitwise", "bitwise_cache", "cache_hit_rate", "hit_rate",
+             "devices", "requests", "waves")
+# row-table columns worth showing, in priority order
+_ROW_COLS = ("name", "arch", "path", "policy", "mode", "section", "qps",
+             "p50_ms", "p99_ms", "step_time_us", "us_per_call",
+             "wire_bytes", "hlo_wire_bytes", "bytes_ratio", "loss",
+             "loss_after_steps", "hit_rate")
+_MAX_ROWS = 24
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if isinstance(v, float):
+        return f"{v:,.3f}" if abs(v) < 100 else f"{v:,.0f}"
+    if isinstance(v, int):
+        return f"{v:,}"
+    return str(v)
+
+
+def _scalars(report: dict) -> list[tuple[str, object]]:
+    """Headline (key, value) pairs from the report's top level and one
+    sub-dict level down, first occurrence per key wins."""
+    found: dict[str, object] = {}
+    levels = [("", report)] + [
+        (f"{k}.", v) for k, v in report.items() if isinstance(v, dict)]
+    for prefix, d in levels:
+        for k, v in d.items():
+            if k in _HEADLINE and k not in found \
+                    and isinstance(v, (int, float, bool)):
+                found[k] = v
+    return [(k, found[k]) for k in _HEADLINE if k in found]
+
+
+def _row_table(rows: list) -> list[str]:
+    rows = [r for r in rows if isinstance(r, dict)]
+    if not rows:
+        return []
+    cols = [c for c in _ROW_COLS if any(c in r for r in rows)][:8]
+    if not cols:
+        return []
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "---|" * len(cols)]
+    for r in rows[:_MAX_ROWS]:
+        out.append("| " + " | ".join(
+            _fmt(r[c]) if c in r else "" for c in cols) + " |")
+    if len(rows) > _MAX_ROWS:
+        out.append(f"\n_... {len(rows) - _MAX_ROWS} more rows in the "
+                   "artifact_")
+    return out
+
+
+def section(path: str) -> list[str]:
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except Exception as e:  # malformed artifact: report, don't raise
+        return [f"### {name}", "", f"could not parse: `{e!r}`", ""]
+    lines = [f"### {name}", ""]
+    if not isinstance(report, dict):
+        return lines + [f"unexpected payload type `{type(report).__name__}`",
+                        ""]
+    failed = report.get("checks_failed")
+    if failed is not None:
+        lines.append("**PASS** — all acceptance checks green" if not failed
+                     else "**FAIL** — " + "; ".join(map(str, failed)))
+        lines.append("")
+    scalars = _scalars(report)
+    if scalars:
+        lines += ["| metric | value |", "|---|---|"]
+        lines += [f"| {k} | {_fmt(v)} |" for k, v in scalars]
+        lines.append("")
+    table = _row_table(report.get("rows", []))
+    if table:
+        lines += table + [""]
+    return lines
+
+
+def render(bench_dir: str) -> str:
+    lines = ["## Benchmark summary", ""]
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    if not paths:
+        lines.append(f"_no `BENCH_*.json` artifacts under `{bench_dir}`_")
+    for p in paths:
+        lines += section(p)
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/bench")
+    args = ap.parse_args(argv)
+    sys.stdout.write(render(args.dir))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,12 +13,11 @@ Pallas TPU kernels in ``repro.kernels`` implement the same contracts (their
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .partitions import Partition, naive_partition, qr_partitions
+from .partitions import Partition, qr_partitions
 
 __all__ = [
     "FullEmbedding",
@@ -61,6 +60,20 @@ def table_rows(table, idx):
     return jnp.take(table, idx, axis=0)
 
 
+def _gather(gather, table, idx, key):
+    """Route one sub-table lookup through ``gather`` when given.
+
+    ``gather(table_leaf, row_ids, sub_key) -> rows`` replaces the local
+    ``table_rows`` take — the hook the sharded serve path uses to fetch
+    remotely-resident rows over the mesh (``dist.serve_placement``)
+    through the *same* ``apply``/``bag_pool`` combine code as the local
+    path, so the two are bit-identical by construction.
+    """
+    if gather is None:
+        return table_rows(table, idx)
+    return gather(table, idx, key)
+
+
 @dataclasses.dataclass(frozen=True)
 class FullEmbedding:
     """The baseline |S| x D table (paper Fig. 1 / 'Full')."""
@@ -73,8 +86,8 @@ class FullEmbedding:
         scale = (1.0 / self.num_categories) ** 0.5
         return {"table": _uniform(key, (self.num_categories, self.dim), scale, self.param_dtype)}
 
-    def apply(self, params, idx):
-        return table_rows(params["table"], idx)
+    def apply(self, params, idx, gather=None):
+        return _gather(gather, params["table"], idx, "table")
 
     @property
     def num_params(self) -> int:
@@ -98,8 +111,9 @@ class HashEmbedding:
         scale = (1.0 / self.num_categories) ** 0.5
         return {"table": _uniform(key, (self.m, self.dim), scale, self.param_dtype)}
 
-    def apply(self, params, idx):
-        return table_rows(params["table"], jnp.asarray(idx) % self.m)
+    def apply(self, params, idx, gather=None):
+        return _gather(gather, params["table"], jnp.asarray(idx) % self.m,
+                       "table")
 
     @property
     def num_params(self) -> int:
@@ -163,16 +177,16 @@ class CompositionalEmbedding:
             for j, (p, d, k) in enumerate(zip(self.partitions, self.dims, keys))
         }
 
-    def partition_embeddings(self, params, idx):
+    def partition_embeddings(self, params, idx, gather=None):
         """Per-partition rows (the 'feature generation' mode, paper §4)."""
         idx = jnp.asarray(idx)
         return [
-            table_rows(params[f"table_{j}"], p.bucket(idx))
+            _gather(gather, params[f"table_{j}"], p.bucket(idx), f"table_{j}")
             for j, p in enumerate(self.partitions)
         ]
 
-    def apply(self, params, idx):
-        zs = self.partition_embeddings(params, idx)
+    def apply(self, params, idx, gather=None):
+        zs = self.partition_embeddings(params, idx, gather=gather)
         if self.op == "concat":
             return jnp.concatenate(zs, axis=-1)
         if self.op == "add":
@@ -214,14 +228,15 @@ def qr_embedding(
     )
 
 
-def bag_pool(module, params, idx, mask=None):
+def bag_pool(module, params, idx, mask=None, gather=None):
     """Sum-pooled multi-hot lookup: ``sum_l emb(idx[..., l]) * mask[..., l]``.
 
     ``idx``: int array ``(..., L)``; ``mask``: optional ``(..., L)`` (1 keeps
     the row).  Returns ``(..., dim)``.  This is the contract the fused
-    Pallas ``embedding_bag`` kernel implements.
+    Pallas ``embedding_bag`` kernel implements.  ``gather`` substitutes
+    the row fetch (see ``_gather``) — the sharded serve path's hook.
     """
-    emb = module.apply(params, idx)  # (..., L, D)
+    emb = module.apply(params, idx, gather=gather)  # (..., L, D)
     # pool in f32, round once (accumulation-audit convention): a bf16
     # running sum would round every one of the L adds
     pooled = emb.astype(jnp.float32)

@@ -14,21 +14,31 @@ precision-critical leaves).
 
 ``repro.dist.accounting`` prices a step's collectives in wire bytes per
 chip, cross-checkable against the HLO analyzer.
+
+``repro.dist.serve_placement`` places quantized serving tables across a
+device mesh from the memory plan's byte accounting (replicate small,
+row-shard big) and implements the two-phase all-to-all row exchange the
+sharded serve path fetches remote rows through.
 """
 
-from . import accounting, compress, policy, sharding
+from . import accounting, compress, policy, serve_placement, sharding
 from .compress import ef_psum_grads, init_error_state, quantize_int8, resolve_modes
 from .policy import AUTO, CompressionPolicy, resolve_policy
+from .serve_placement import (ServePlacement, SubTablePlacement,
+                              exchange_rows, place_params, plan_placement)
 from .sharding import (INFERENCE_OVERRIDES, batch_axes, constrain,
                        constrain_batch, fit_template, model_divides,
-                       scatter_dims, set_batch_shard_axes, spec_for,
-                       tree_shardings)
+                       placement_overrides, placement_specs, scatter_dims,
+                       set_batch_shard_axes, spec_for, tree_shardings)
 
 __all__ = [
-    "sharding", "compress", "policy", "accounting",
+    "sharding", "compress", "policy", "accounting", "serve_placement",
     "spec_for", "tree_shardings", "batch_axes", "constrain",
     "constrain_batch", "set_batch_shard_axes", "model_divides",
     "fit_template", "INFERENCE_OVERRIDES", "scatter_dims",
+    "placement_overrides", "placement_specs",
     "quantize_int8", "init_error_state", "ef_psum_grads", "resolve_modes",
     "AUTO", "CompressionPolicy", "resolve_policy",
+    "ServePlacement", "SubTablePlacement", "plan_placement",
+    "place_params", "exchange_rows",
 ]

@@ -42,7 +42,8 @@ from .compress import resolve_modes
 __all__ = ["leaf_reduce_bytes", "grad_wire_bytes", "dp_step_wire_bytes",
            "fsdp_step_wire_bytes", "ring_all_reduce_bytes",
            "ring_all_gather_bytes", "ring_reduce_scatter_bytes",
-           "ring_all_to_all_bytes"]
+           "ring_all_to_all_bytes", "serve_exchange_wire_bytes",
+           "serve_wave_wire_bytes"]
 
 _SCALE_BYTES = 4  # one f32 scalar per pmax-shared quantisation scale
 
@@ -121,6 +122,65 @@ def grad_wire_bytes(grads_like, policy, n: int, *, pattern: str = "all_reduce",
         total += b
     return {"total_bytes": total, "per_mode": per_mode, "per_leaf": per_leaf,
             "n_devices": n, "pattern": pattern}
+
+
+def serve_exchange_wire_bytes(lookups: int, width: int, n: int, *,
+                              quantized: bool = True,
+                              row_dtype_bytes: int = 4) -> dict:
+    """Per-chip wire bytes of one row-sharded serve exchange
+    (``dist.serve_placement.exchange_rows``) for one sub-table and wave.
+
+    The exchange is two all-to-all phases over ``(n, C)``-shaped buffers
+    (C = ``lookups``, this device's row fetches for the wave):
+
+    * **ids out** — one int32 global row id per lookup slot, every slot
+      shipped (the send buffer is dense): ``(n−1)/n · 4·n·C``;
+    * **rows back** — per lookup slot, the stored row at its stored
+      width: quantized tables ship ``q`` int8 ``(n, C, w)`` + ``scale``
+      bf16-as-uint16 ``(n, C, 1)`` + ``zp`` int8 ``(n, C, 1)`` (int8
+      stays on the wire; dequant happens at the requesting device);
+      dense tables ship ``row_dtype_bytes`` per element.
+
+    Static shapes, pure data movement — no reduction, no tolerance: the
+    serve_dist bench asserts this equals the HLO analyzer's collective
+    bytes for the compiled wave program *exactly*.
+    """
+    ids = ring_all_to_all_bytes(4.0 * n * lookups, n)
+    if quantized:
+        rows = (ring_all_to_all_bytes(1.0 * n * lookups * width, n)
+                + ring_all_to_all_bytes(2.0 * n * lookups, n)
+                + ring_all_to_all_bytes(1.0 * n * lookups, n))
+    else:
+        rows = ring_all_to_all_bytes(
+            float(row_dtype_bytes) * n * lookups * width, n)
+    return {"ids_bytes": ids, "rows_bytes": rows,
+            "total_bytes": ids + rows}
+
+
+def serve_wave_wire_bytes(placement, batch_per_device: int,
+                          bag_len: int) -> dict:
+    """Per-chip wire bytes of one sharded serve wave: the sum of
+    ``serve_exchange_wire_bytes`` over the placement's row-sharded
+    sub-tables, each fetching ``batch_per_device · bag_len`` rows.
+    Replicated sub-tables cost nothing — that is the point of the
+    replication threshold."""
+    n = placement.n_devices
+    lookups = batch_per_device * bag_len
+    per_entry = []
+    total = 0.0
+    for e in placement.sharded:
+        # stored element width of a dense sub-table (4 f32, 2 bf16) —
+        # recoverable from the placement's byte accounting
+        dtype_bytes = (e.bytes_total // max(e.rows * e.width, 1)
+                       if not e.quantized else 4)
+        b = serve_exchange_wire_bytes(lookups, e.width, n,
+                                      quantized=e.quantized,
+                                      row_dtype_bytes=dtype_bytes)
+        per_entry.append({"path": e.path, "width": e.width,
+                          "quantized": e.quantized, **b})
+        total += b["total_bytes"]
+    return {"total_bytes": total, "lookups_per_device": lookups,
+            "n_devices": n, "per_entry": per_entry}
 
 
 def _scalar_overhead(n: int, n_scalars: int) -> float:

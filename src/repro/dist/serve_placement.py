@@ -1,0 +1,310 @@
+"""Plan-aware placement of serving tables across a device mesh.
+
+Production recsys serves tables too big for one host; this module decides,
+from the :class:`~repro.plan.memory_plan.MemoryPlan`'s per-table byte
+accounting (or the built params when no plan is given), where each
+sub-table lives on an N-device serving mesh:
+
+* **replicate** sub-tables below a replication-byte threshold — small /
+  hot tables (the QR quotient side, narrow mixed-dimension tables) are
+  cheaper to copy everywhere than to chat about;
+* **row-shard** everything else contiguously over the ``data`` axis:
+  device ``d`` owns rows ``[d*R/N, (d+1)*R/N)`` — itself a quotient
+  partition of the row space, the paper's own machinery applied to
+  placement.  Rows are padded up to a multiple of N so the spec engine
+  never meets an indivisible axis.
+
+Lookups into a row-sharded sub-table route through
+:func:`exchange_rows` — a **two-phase all-to-all** mirroring the
+train-side compressed collectives (``dist.compress``): phase 1 ships
+each lookup's row id to the owning device, phase 2 ships the rows home.
+Quantized tables keep **int8 on the wire** (q int8, scale bf16 bitcast
+to uint16, zp int8) and dequantize at the requesting device with exactly
+the ``core.compositional.table_rows`` arithmetic, so the exchanged rows
+are bit-identical to a local gather.  ``dist.accounting.
+serve_exchange_wire_bytes`` prices the exchange with the same ring
+formulas the HLO analyzer uses; ``benchmarks/serve_dist_bench.py``
+asserts they match the compiled program's collectives *exactly*.
+
+The default threshold derives from the plan: ``total_table_bytes /
+(4·N)`` — any sub-table worth more than a quarter of a device's even
+share earns sharding; everything smaller replicates.  This bounds
+per-device bytes by ``total/N + replicated`` (the bench's acceptance
+row) while keeping the quotient sides of QR pairs local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding
+
+from ..core.compositional import is_quantized_table
+
+__all__ = ["SubTablePlacement", "ServePlacement", "plan_placement",
+           "place_params", "exchange_rows", "sub_table_items",
+           "REPLICATION_DIVISOR"]
+
+# threshold = total_table_bytes / (REPLICATION_DIVISOR * n_devices):
+# a sub-table bigger than 1/4 of a device's even share is worth sharding
+REPLICATION_DIVISOR = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SubTablePlacement:
+    """Where one sub-table (one partition's rows) lives on the mesh."""
+
+    feature: int
+    table_key: str          # "table" | "table_0" | "table_1" | ...
+    path: str               # "tables/<feature>/<table_key>"
+    rows: int
+    padded_rows: int        # rows rounded up to a multiple of n (row_shard)
+    width: int
+    bytes_total: int        # stored bytes (q+scale+zp for quantized tables)
+    strategy: str           # "replicate" | "row_shard"
+    quantized: bool
+
+    @property
+    def pad_bytes(self) -> int:
+        return (self.bytes_total * (self.padded_rows - self.rows)
+                // max(self.rows, 1))
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SubTablePlacement":
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ServePlacement:
+    """The full placement decision for one model's tables on N devices."""
+
+    n_devices: int
+    threshold_bytes: int
+    entries: list[SubTablePlacement] = dataclasses.field(default_factory=list)
+
+    def entry(self, feature: int, table_key: str) -> SubTablePlacement:
+        for e in self.entries:
+            if e.feature == feature and e.table_key == table_key:
+                return e
+        raise KeyError(f"no placement entry for tables/{feature}/{table_key}")
+
+    @property
+    def sharded(self) -> list[SubTablePlacement]:
+        return [e for e in self.entries if e.strategy == "row_shard"]
+
+    @property
+    def replicated(self) -> list[SubTablePlacement]:
+        return [e for e in self.entries if e.strategy == "replicate"]
+
+    def total_bytes(self) -> int:
+        return sum(e.bytes_total for e in self.entries)
+
+    def replicated_bytes(self) -> int:
+        return sum(e.bytes_total for e in self.replicated)
+
+    def pad_bytes(self) -> int:
+        return sum(e.pad_bytes for e in self.sharded)
+
+    def bytes_per_device(self) -> int:
+        """Resident table bytes on one device: every replicated sub-table
+        in full plus an even 1/N share of each padded row-sharded one."""
+        shard = sum((e.bytes_total + e.pad_bytes) // self.n_devices
+                    for e in self.sharded)
+        return self.replicated_bytes() + shard
+
+    def replicated_features(self, n_features: int) -> np.ndarray:
+        """Bool per feature: every sub-table replicated (locally resident)
+        — the set the device hot-row cache may hold in sharded serving."""
+        out = np.ones(n_features, bool)
+        for e in self.sharded:
+            out[e.feature] = False
+        return out
+
+    def rows_per_device(self, e: SubTablePlacement) -> int:
+        return e.padded_rows // self.n_devices
+
+    def summary(self) -> dict:
+        return {"n_devices": self.n_devices,
+                "threshold_bytes": self.threshold_bytes,
+                "sub_tables": len(self.entries),
+                "row_sharded": len(self.sharded),
+                "replicated": len(self.replicated),
+                "total_bytes": self.total_bytes(),
+                "replicated_bytes": self.replicated_bytes(),
+                "pad_bytes": self.pad_bytes(),
+                "bytes_per_device": self.bytes_per_device()}
+
+    def as_dict(self) -> dict:
+        return {"n_devices": self.n_devices,
+                "threshold_bytes": self.threshold_bytes,
+                "entries": [e.as_dict() for e in self.entries]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServePlacement":
+        return cls(n_devices=d["n_devices"],
+                   threshold_bytes=d["threshold_bytes"],
+                   entries=[SubTablePlacement.from_dict(e)
+                            for e in d["entries"]])
+
+
+def _leaf_bytes(leaf) -> int:
+    if is_quantized_table(leaf):
+        return sum(_leaf_bytes(v) for v in leaf.values())
+    n = int(math.prod(leaf.shape)) if leaf.shape else 1
+    return n * jnp.dtype(leaf.dtype).itemsize
+
+
+def sub_table_items(params) -> list[tuple[int, str, object]]:
+    """``(feature, table_key, leaf)`` per sub-table of ``params["tables"]``
+    (a leaf is a 2-D array or a quantized-table dict), in feature order."""
+    out = []
+    for i, tp in enumerate(params["tables"]):
+        for key in sorted(tp):
+            out.append((i, key, tp[key]))
+    return out
+
+
+def plan_placement(params, n_devices: int, *, plan=None,
+                   threshold_bytes: int | None = None) -> ServePlacement:
+    """Place every sub-table of ``params["tables"]`` on ``n_devices``.
+
+    Byte accounting comes from the built arrays (authoritative — they are
+    what gets resident); the ``plan`` supplies the threshold's byte base
+    when given (``plan.total_bytes``, the planner's claim, which
+    ``plan_bench`` already pins to the built bytes).  ``n_devices == 1``
+    replicates everything — the placement degenerates to single-host
+    serving and the engine takes the unsharded path.
+    """
+    items = sub_table_items(params)
+    total = sum(_leaf_bytes(leaf) for _, _, leaf in items)
+    if threshold_bytes is None:
+        base = int(getattr(plan, "total_bytes", 0) or 0) or total
+        threshold_bytes = max(1, base // (REPLICATION_DIVISOR
+                                          * max(n_devices, 1)))
+    entries = []
+    for feature, key, leaf in items:
+        if is_quantized_table(leaf):
+            rows, width = int(leaf["q"].shape[0]), int(leaf["q"].shape[1])
+        else:
+            rows, width = int(leaf.shape[0]), int(leaf.shape[1])
+        nbytes = _leaf_bytes(leaf)
+        shard = (n_devices > 1 and nbytes > threshold_bytes
+                 and rows >= n_devices)
+        padded = (-rows % n_devices) + rows if shard else rows
+        entries.append(SubTablePlacement(
+            feature=feature, table_key=key, path=f"tables/{feature}/{key}",
+            rows=rows, padded_rows=padded, width=width, bytes_total=nbytes,
+            strategy="row_shard" if shard else "replicate",
+            quantized=is_quantized_table(leaf)))
+    return ServePlacement(n_devices=n_devices,
+                          threshold_bytes=int(threshold_bytes),
+                          entries=entries)
+
+
+def _pad_rows(leaf, padded_rows: int):
+    def pad(x):
+        extra = padded_rows - x.shape[0]
+        if extra <= 0:
+            return x
+        return jnp.concatenate(
+            [x, jnp.zeros((extra,) + x.shape[1:], x.dtype)])
+    if is_quantized_table(leaf):
+        return {k: pad(v) for k, v in leaf.items()}
+    return pad(leaf)
+
+
+def place_params(params, placement: ServePlacement, mesh):
+    """Pad + device_put the param tree per the placement.
+
+    Row-sharded sub-tables land row-split over the mesh's ``data`` axis
+    (rows pre-padded to ``padded_rows`` so the split is always even);
+    everything else — replicated sub-tables, MLPs, projections —
+    replicates (serving weights are read-only, so FSDP-style gathering
+    buys nothing; same rationale as ``sharding.INFERENCE_OVERRIDES``).
+    Returns ``(placed_params, spec_tree)`` where ``spec_tree`` is the
+    matching ``PartitionSpec`` pytree (the ``shard_map`` in_spec).
+    """
+    from .sharding import placement_specs
+    params = dict(params)
+    tables = [dict(tp) for tp in params["tables"]]
+    for e in placement.sharded:
+        tables[e.feature][e.table_key] = _pad_rows(
+            tables[e.feature][e.table_key], e.padded_rows)
+    params["tables"] = tables
+    specs = placement_specs(params, placement)
+    placed = jax.tree.map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        params, specs)
+    return placed, specs
+
+
+# ------------------------------------------------------------- the exchange
+
+
+def _wire(x, axis: str):
+    """Phase-2 all-to-all with the compressed dtype kept on the wire.
+
+    bf16 rides as uint16 (``dist.compress``'s bitcast idiom — some
+    backends widen bf16 collectives); int8/f32/int32 go as themselves.
+    """
+    if x.dtype == jnp.bfloat16:
+        home = lax.all_to_all(lax.bitcast_convert_type(x, jnp.uint16),
+                              axis, split_axis=0, concat_axis=0)
+        return lax.bitcast_convert_type(home, jnp.bfloat16)
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0)
+
+
+def exchange_rows(leaf, ids, n: int, rows_per_device: int,
+                  axis: str = "data"):
+    """Fetch rows of a row-sharded sub-table from their owning devices.
+
+    Runs inside ``shard_map`` over mesh axis ``axis`` (size ``n``).
+    ``leaf`` is the *local* row shard (array or quantized dict, rows =
+    ``rows_per_device``); ``ids`` is this device's lookup tensor of
+    global row ids (any shape, int).  Two-phase, mirroring the train-side
+    compressed collectives:
+
+    1. ids out: each lookup's global id maps to ``(owner, local_row)``;
+       ids pack into an ``(n, C)`` send buffer (C = lookups) and
+       all-to-all to their owners;
+    2. rows back: owners gather their local rows and all-to-all them
+       home, int8/bf16 staying narrow on the wire; quantized rows
+       dequantize *after* the trip with ``table_rows``' exact arithmetic.
+
+    Unused send slots carry id 0 (in-range; the per-lookup unpermute
+    ignores them), so the result is bit-identical to a local gather from
+    the unsharded table — the parity the serve_dist tests pin.
+    """
+    shape = ids.shape
+    flat = ids.reshape(-1).astype(jnp.int32)
+    c = flat.shape[0]
+    owners = flat // rows_per_device
+    local = flat % rows_per_device
+    # position of each lookup within its owner's bucket: one-hot cumsum
+    onehot = (owners[:, None] == jnp.arange(n, dtype=jnp.int32)[None, :]
+              ).astype(jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0),
+                              owners[:, None], axis=1)[:, 0] - 1
+    send = jnp.zeros((n, c), jnp.int32).at[owners, pos].set(local)
+    recv = lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+
+    def route(shard):
+        rows = jnp.take(shard, recv, axis=0)        # (n, C, w)
+        return _wire(rows, axis)[owners, pos]       # (C, w)
+
+    if is_quantized_table(leaf):
+        q = route(leaf["q"]).astype(jnp.float32)
+        zp = route(leaf["zp"]).astype(jnp.float32)
+        scale = route(leaf["scale"]).astype(jnp.float32)
+        out = (q - zp) * scale                      # == table_rows bits
+        return out.reshape(shape + (out.shape[-1],))
+    out = route(leaf)
+    return out.reshape(shape + (out.shape[-1],))

@@ -53,6 +53,7 @@ __all__ = [
     "RULES", "INFERENCE_OVERRIDES", "spec_for", "tree_shardings",
     "fit_template", "batch_axes", "constrain", "constrain_batch",
     "set_batch_shard_axes", "model_divides", "scatter_dims",
+    "placement_overrides", "placement_specs",
 ]
 
 
@@ -87,6 +88,41 @@ def _default_template(rank: int) -> tuple:
 # ``tree_shardings`` / ``param_structs`` by the dry-run machinery.
 NO_FSDP = "no_fsdp"
 INFERENCE_OVERRIDES: tuple[tuple[str, object], ...] = ((r".*", NO_FSDP),)
+
+
+def placement_overrides(placement) -> tuple[tuple[str, tuple], ...]:
+    """Override rules for plan-aware *serving* placement.
+
+    Each row-sharded sub-table of a ``dist.serve_placement.ServePlacement``
+    gets a path-exact rule splitting its rows over the ``data`` axis; a
+    trailing catch-all replicates everything else (serving weights are
+    read-only — the same no-FSDP rationale as ``INFERENCE_OVERRIDES``,
+    and the dense stage runs per-device on its batch slice with full
+    weights).  Feed to ``spec_for``/``tree_shardings`` like any override
+    table; first match wins, so the sharded-table rules lead.
+    """
+    rules = [(rf"^{re.escape(e.path)}($|/)", ("data", None))
+             for e in placement.entries if e.strategy == "row_shard"]
+    rules.append((r".*", ()))
+    return tuple(rules)
+
+
+def placement_specs(params, placement):
+    """``PartitionSpec`` pytree for serve-time placement — the
+    ``shard_map`` in_specs of the sharded wave program.  Row-sharded
+    sub-table leaves (rows pre-padded to a multiple of N, so the fitter
+    never relocates the axis) get ``P("data", None)``; every other leaf
+    replicates."""
+    from ..optim.optimizers import leaf_paths
+    overrides = placement_overrides(placement)
+    sizes = {"data": placement.n_devices}
+    leaves, treedef = jax.tree.flatten(params)
+    paths = leaf_paths(params)
+    specs = [fit_template(_template_for(p, len(l.shape), overrides),
+                          l.shape, sizes, batch=("data",))
+             if getattr(l, "ndim", 0) > 1 else P()
+             for p, l in zip(paths, leaves)]
+    return jax.tree.unflatten(treedef, specs)
 
 
 # ------------------------------------------------------ batch-axes module state

@@ -28,7 +28,6 @@ Accounting rules (per-device program — SPMD shapes are already per-chip):
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

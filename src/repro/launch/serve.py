@@ -9,8 +9,10 @@ speaks the LM prefill/decode interface:
   over post-training-quantized tables (``--quantize {f32,bf16,int8}``)
   with an optional hot-row cache (``--cache-rows N``, device- or
   host-resident via ``--cache-impl``) and continuous or lock-step wave
-  batching (``--batching``), and report table bytes, p50/p99 latency,
-  QPS, and cache hit rate.
+  batching (``--batching``), optionally sharded across a serving mesh
+  (``--mesh-devices N``: plan-aware placement, remote rows over the
+  all-to-all exchange), and report table bytes, p50/p99 latency, QPS,
+  and cache hit rate.
 """
 
 import argparse
@@ -93,9 +95,35 @@ def _serve_rec(mod, args):
         cls = (DeviceHotRowCache if args.cache_impl == "device"
                else HotRowCache)
         cache = cls(capacity_rows=cache_rows, capacity_bytes=cache_bytes)
-    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
-    engine = RecsysEngine(cfg, qparams, max_batch=args.batch_size,
-                          cache=cache, mesh=mesh, batching=args.batching)
+    if args.mesh_devices and args.mesh_devices > 1:
+        # sharded serving: plan-aware placement over a 1-D serve mesh —
+        # the engine places the tables itself (replicate small, row-shard
+        # big) and routes remote rows through the all-to-all exchange
+        if args.cache_impl == "host" and cache is not None:
+            raise SystemExit("--mesh-devices needs --cache-impl device "
+                             "(or --cache-rows 0)")
+        # the engine requires max_batch % mesh_devices == 0 (each device
+        # takes an equal wave slice); round the CLI default up rather
+        # than bounce the user on an internal invariant
+        n = args.mesh_devices
+        batch = -(-args.batch_size // n) * n
+        if batch != args.batch_size:
+            print(f"  note: --batch-size {args.batch_size} -> {batch} "
+                  f"(must be a multiple of --mesh-devices {n})")
+        engine = RecsysEngine(cfg, qparams, max_batch=batch,
+                              cache=cache, batching=args.batching,
+                              mesh_devices=args.mesh_devices, plan=plan)
+        pl = engine.placement
+        rep = memory_report(params, qparams, placement=pl)
+        print(f"  placement: {len(pl.sharded)} sharded / "
+              f"{len(pl.replicated)} replicated sub-tables over "
+              f"{pl.n_devices} devices, "
+              f"{rep['placement']['table_bytes_per_device']} B/device")
+    else:
+        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+        engine = RecsysEngine(cfg, qparams, max_batch=args.batch_size,
+                              cache=cache, mesh=mesh,
+                              batching=args.batching)
 
     # Zipfian synthetic request stream (the criteo generator's skew)
     rng = np.random.default_rng(0)
@@ -152,6 +180,11 @@ def main():
                          "lock-step pow2 scheduler")
     ap.add_argument("--max-bag", type=int, default=4,
                     help="max multi-hot ids per categorical feature")
+    ap.add_argument("--mesh-devices", type=int, default=None,
+                    help="serve the tables sharded across this many "
+                         "devices (plan-aware placement: replicate small "
+                         "sub-tables, row-shard big ones; batch size must "
+                         "be a multiple of it)")
     from .plan_cli import add_plan_args
     add_plan_args(ap)
     args = ap.parse_args()

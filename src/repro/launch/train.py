@@ -7,7 +7,6 @@ checkpoints, restart-safe).  On a real cluster the only changes are
 """
 
 import argparse
-import os
 
 import jax
 import numpy as np

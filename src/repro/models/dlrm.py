@@ -130,7 +130,7 @@ def dlrm_init(key, cfg: DLRMConfig):
 
 
 def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None,
-                   proj=None):
+                   proj=None, gathers=None):
     """Per-feature pooled embedding list — the serving stack's embed stage.
 
     ``sparse_idx``: one-hot ``(B, F)`` or multi-hot ``(B, F, L)`` with
@@ -144,6 +144,12 @@ def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None,
     learned ``(d_i, D)`` projection — identity (no entry, no matmul) when
     widths match.  Returns a list of ``(B, D)`` features (feature mode
     expands per partition, one-hot only).
+
+    ``gathers`` (optional, one per feature, entries may be ``None``)
+    substitutes each feature's row fetch (``core.compositional._gather``)
+    — the sharded serve path routes remote rows through it; a feature
+    with a hook always takes the jnp ``bag_pool`` path, never the fused
+    kernel (which gathers locally by construction).
     """
     modules = tables_for(cfg) if modules is None else modules
     multihot = sparse_idx.ndim == 3
@@ -160,8 +166,9 @@ def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None,
             if _feature_mode(cfg) and isinstance(mod, CompositionalEmbedding):
                 raise NotImplementedError(
                     "feature-generation mode has no multi-hot serving path")
+            g = None if gathers is None else gathers[i]
             single = isinstance(mod, (FullEmbedding, HashEmbedding))
-            if use_kernel and (qr2 or single):
+            if use_kernel and g is None and (qr2 or single):
                 # serving hot path: fused gather (+dequant) → pool →
                 # projection in one VMEM pass (kernels/serve_path.py);
                 # single tables pre-fold (hash: idx mod m) so the kernel
@@ -178,7 +185,7 @@ def embed_features(table_params, sparse_idx, cfg, modules=None, mask=None,
                                                 proj=w)
                 feats.append(pooled)
             else:
-                pooled = bag_pool(mod, tp, idx, mk)
+                pooled = bag_pool(mod, tp, idx, mk, gather=g)
                 feats.append(_project(pooled, proj, i))
             continue
         idx = sparse_idx[:, i]

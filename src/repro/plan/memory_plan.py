@@ -156,6 +156,21 @@ class MemoryPlan:
                                          in sorted(dims.items())},
                 "parked": len(self.notes.get("parked", []))}
 
+    def annotate_placement(self, placement) -> None:
+        """Record a serving placement (``dist.serve_placement.
+        ServePlacement``) in the plan's notes so the JSON artifact carries
+        where each sub-table lives on the serving mesh — round-trips
+        through ``to_json``/``from_json`` like every note."""
+        self.notes["serve_placement"] = placement.as_dict()
+
+    def serve_placement(self):
+        """The annotated serving placement, or ``None``."""
+        d = self.notes.get("serve_placement")
+        if d is None:
+            return None
+        from ..dist.serve_placement import ServePlacement
+        return ServePlacement.from_dict(d)
+
     def to_json(self) -> str:
         return json.dumps(
             {"schema": SCHEMA_VERSION, "arch": self.arch,

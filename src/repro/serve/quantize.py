@@ -183,18 +183,36 @@ def table_shapes(params, patterns: Sequence[str] = (TABLE_PATTERN,)
     return out
 
 
-def memory_report(params, qparams) -> dict:
+def memory_report(params, qparams, placement=None) -> dict:
     """Bytes vs f32 for the table leaves: the number the paper + serving
     stack exist to shrink.  ``ratio`` is what the serve bench gates on;
     ``table_dims`` is the distinct-row-width set (singleton for uniform
-    models, several entries under a mixed-dimension plan)."""
+    models, several entries under a mixed-dimension plan).
+
+    With a ``placement`` (``dist.serve_placement.ServePlacement``) the
+    report adds the sharded-serving view: per-device table bytes under
+    that placement (replicated sub-tables count in full, row-sharded
+    ones contribute their padded 1/N slice) and the per-device ratio
+    against an even f32 split — the memory argument for serving a plan
+    on N devices."""
     base = table_bytes(params)
     quant = table_bytes(qparams)
-    return {"f32_table_bytes": base, "quant_table_bytes": quant,
-            "ratio": quant / base if base else 1.0,
-            "table_dims": sorted({w for _, _, w in table_shapes(params)}),
-            "model_bytes_f32": sum(_leaf_bytes(l) for l in
-                                   jax.tree.leaves(params)),
-            "model_bytes_quant": sum(
-                _leaf_bytes(l) for l in
-                jax.tree.leaves(qparams, is_leaf=is_quantized_table))}
+    report = {"f32_table_bytes": base, "quant_table_bytes": quant,
+              "ratio": quant / base if base else 1.0,
+              "table_dims": sorted({w for _, _, w in table_shapes(params)}),
+              "model_bytes_f32": sum(_leaf_bytes(l) for l in
+                                     jax.tree.leaves(params)),
+              "model_bytes_quant": sum(
+                  _leaf_bytes(l) for l in
+                  jax.tree.leaves(qparams, is_leaf=is_quantized_table))}
+    if placement is not None:
+        n = placement.n_devices
+        per_dev = placement.bytes_per_device()
+        report["placement"] = {
+            "n_devices": n,
+            "table_bytes_per_device": per_dev,
+            "replicated_bytes": placement.replicated_bytes(),
+            "pad_bytes": placement.pad_bytes(),
+            "ratio_per_device": (per_dev / (base / n)) if base else 1.0,
+        }
+    return report

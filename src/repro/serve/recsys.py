@@ -103,7 +103,9 @@ class RecsysEngine:
     def __init__(self, cfg, params, *, max_batch: int = 32,
                  cache: Optional[HotRowCache] = None, mesh=None,
                  batching: str = "continuous", max_inflight: int = 2,
-                 lookahead: Optional[int] = None):
+                 lookahead: Optional[int] = None,
+                 mesh_devices: Optional[int] = None, placement=None,
+                 plan=None):
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching={batching!r} not in {BATCHING_MODES}")
         self.cfg = cfg
@@ -116,7 +118,23 @@ class RecsysEngine:
         self.batching = batching
         self.max_inflight = max_inflight
         self.lookahead = lookahead or 4 * max_batch
-        if mesh is not None:
+        self._n_shards = int(mesh_devices or 1)
+        if self._n_shards > 1:
+            if getattr(cfg, "use_kernel", False):
+                raise NotImplementedError(
+                    "sharded serving uses the jnp embed path, not the fused "
+                    "kernel — build the config with use_kernel=False")
+            if cache is not None and not isinstance(cache,
+                                                    DeviceHotRowCache):
+                raise NotImplementedError(
+                    "sharded serving supports DeviceHotRowCache only (host "
+                    "cache rows are not locally resident on a mesh)")
+            if max_batch % self._n_shards or max_batch < self._n_shards:
+                raise ValueError(
+                    f"max_batch={max_batch} must be a positive multiple of "
+                    f"mesh_devices={self._n_shards}")
+            params = self._init_sharded(params, placement, plan)
+        elif mesh is not None:
             # inference placement: same rules minus FSDP (read-only weights)
             from ..dist.sharding import INFERENCE_OVERRIDES, tree_shardings
             params = jax.device_put(
@@ -188,6 +206,12 @@ class RecsysEngine:
         # probe + gather + pool + project in ONE program: the fast path
         # costs the same number of dispatches as the in-graph embed
         self._fast_fwd = jax.jit(fast_fwd)
+        self._sharded_embed = self._sharded_dense = self._sharded_fast = None
+        if self._n_shards > 1:
+            self._smap_mirror = self._slab_mirror = None
+            self._mirror_version = None
+            self._build_sharded(dense_stage, space_arr, off_arr, w_index,
+                                feat_width, row_dtypes)
         self._queue: deque[RecRequest] = deque()
         self._inflight: deque[tuple] = deque()
         self._next_uid = 0
@@ -197,6 +221,177 @@ class RecsysEngine:
         self.buckets_seen: set[tuple[int, int]] = set()
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------- sharding
+
+    def _init_sharded(self, params, placement, plan):
+        """Place the tables across a 1-D ``("data",)`` serve mesh per the
+        plan-aware placement (``dist.serve_placement``): sub-tables below
+        the replication threshold live on every device, big ones are
+        row-sharded by quotient partition.  Returns the placed params."""
+        from ..dist.serve_placement import place_params, plan_placement
+        n = self._n_shards
+        if jax.device_count() < n:
+            raise ValueError(
+                f"mesh_devices={n} but only {jax.device_count()} devices "
+                "visible (CI emulates via --xla_force_host_platform_"
+                "device_count)")
+        self._serve_mesh = jax.make_mesh((n,), ("data",))
+        if placement is None:
+            placement = plan_placement(params, n, plan=plan)
+        if placement.n_devices != n:
+            raise ValueError(f"placement built for {placement.n_devices} "
+                             f"devices, engine asked for {n}")
+        self.placement = placement
+        placed, self._param_specs = place_params(params, placement,
+                                                 self._serve_mesh)
+        # only fully-replicated features are cacheable: a row-sharded
+        # feature's rows are not locally resident on every device, so the
+        # device hot-row cache never admits them
+        self._repl_live = placement.replicated_features(len(self.modules))
+        return placed
+
+    def _build_sharded(self, dense_stage, space_arr, off_arr, w_index,
+                       feat_width, row_dtypes):
+        """Sharded analogues of the single-host programs, same program
+        boundaries (embed | dense | fast-probe) so each per-device
+        computation is the *same XLA program* as its single-host
+        counterpart at the per-device batch — that is what makes
+        sharded-vs-single-host logits bit-identical (the serve_dist bench
+        and tests assert it).  Row-sharded sub-tables fetch rows through
+        the two-phase all-to-all exchange (``dist.serve_placement.
+        exchange_rows``); everything else is local."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from ..core.compositional import bag_pool, table_rows
+        from ..dist.serve_placement import exchange_rows
+        from ..models.dlrm import _project, embed_features
+        cfg, n = self.cfg, self._n_shards
+        rpd = {(e.feature, e.table_key): self.placement.rows_per_device(e)
+               for e in self.placement.sharded}
+        repl = tuple(bool(x) for x in self._repl_live)
+
+        def gather_for(i):
+            if repl[i]:
+                return None  # fully local feature: plain bag_pool gather
+
+            def g(leaf, ids, key):
+                r = rpd.get((i, key))
+                if r is None:  # replicated sub-table of a sharded feature
+                    return table_rows(leaf, ids)
+                return exchange_rows(leaf, ids, n, r, axis="data")
+            return g
+
+        gathers = [gather_for(i) for i in range(len(self.modules))]
+
+        def embed_sh(params, idx, mask):
+            feats = embed_features(params["tables"], idx, cfg, mask=mask,
+                                   proj=params.get("proj"), gathers=gathers)
+            return jnp.stack(feats, axis=1)
+
+        def dense_sh(params, dense, feats):
+            return dense_stage(params, dense, feats, cfg)
+
+        def fast_sh(params, idx, mask, smap, slabs):
+            # replicated features ride the slot-map probe exactly as the
+            # single-host fast path; sharded features always go to their
+            # tables (they are never cached); the miss count only sees
+            # cacheable slots and is psum'd so every device agrees
+            flat = idx % space_arr[None, :, None] + off_arr[None, :, None]
+            slots = jnp.take(smap, flat, axis=0)
+            proj = params.get("proj")
+            feats, nmiss = [], jnp.int32(0)
+            for i in range(len(self.modules)):
+                if repl[i]:
+                    rows = jnp.take(slabs[w_index[feat_width[i]]],
+                                    slots[:, i, :], axis=0)
+                    pooled = (rows * mask[:, i, :, None]
+                              .astype(jnp.float32)).sum(axis=1) \
+                        .astype(row_dtypes[i])
+                    feats.append(_project(pooled, proj, i))
+                    nmiss = nmiss + jnp.sum((slots[:, i, :] < 0)
+                                            & (mask[:, i, :] > 0))
+                else:
+                    pooled = bag_pool(self.modules[i], params["tables"][i],
+                                      idx[:, i, :], mask[:, i, :],
+                                      gather=gathers[i])
+                    feats.append(_project(pooled, proj, i))
+            return jnp.stack(feats, axis=1), jax.lax.psum(nmiss, "data")
+
+        mesh, specs = self._serve_mesh, self._param_specs
+        self._sharded_embed = jax.jit(shard_map(
+            embed_sh, mesh=mesh,
+            in_specs=(specs, P("data"), P("data")), out_specs=P("data")))
+        self._sharded_dense = jax.jit(shard_map(
+            dense_sh, mesh=mesh,
+            in_specs=(specs, P("data"), P("data")), out_specs=P("data")))
+        self._sharded_fast = jax.jit(shard_map(
+            fast_sh, mesh=mesh,
+            in_specs=(specs, P("data"), P("data"), P(), P()),
+            out_specs=(P("data"), P())))
+
+    def _sharded_cache_state(self):
+        """Slot map + slabs mirrored to every mesh device (replicated
+        NamedSharding), refreshed only when cache residency changes.  The
+        mirror is a copy: admission's donated scatter consumes the
+        cache's own slab buffer, never the mirror the in-flight waves
+        read."""
+        ver = self.cache.residency_version
+        if self._mirror_version != ver:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            rep = NamedSharding(self._serve_mesh, P())
+            self._smap_mirror = jax.device_put(self._sync_slot_map(), rep)
+            self._slab_mirror = tuple(
+                jax.device_put(self.cache.slab(d), rep)
+                for d in self._widths)
+            self._mirror_version = ver
+        return self._smap_mirror, self._slab_mirror
+
+    def _admit_cacheable(self, idx: np.ndarray, mask: np.ndarray) -> None:
+        """Sharded-mode admission half of ``_embed_device``: look up and
+        admit this wave's *cacheable* (replicated-feature) rows with full
+        per-key accounting, computing only the miss rows.  Features are
+        not produced — the caller recomputes the wave through the pure
+        sharded programs."""
+        cache = self.cache
+        f = idx.shape[1]
+        live = (mask > 0) & np.asarray(self._repl_live)[None, :, None]
+        canon = self._canonical(idx)
+        packed = canon + (np.arange(f, dtype=np.int64)[None, :, None]
+                          << _FEATURE_SHIFT)
+        keys_live = packed[live]
+        if not keys_live.size:
+            return
+        uniq, counts = np.unique(keys_live, return_counts=True)
+        key_list = uniq.tolist()
+        _, miss_u = cache.lookup_many(key_list, counts)
+        if miss_u.any():
+            rows = self._compute_miss_rows(uniq[miss_u])
+            cache.put_many(uniq[miss_u].tolist(), rows, pinned=key_list)
+
+    def _dispatch_sharded(self, dense, idx, mask):
+        """Dispatch one wave through the sharded programs; returns
+        ``(logits, check)`` with the same speculative-probe contract as
+        the single-host device-cache path."""
+        check = None
+        if (isinstance(self.cache, DeviceHotRowCache)
+                and not self.cache.record_events
+                and self._flat_total <= _SLOT_MAP_ROWS_MAX
+                and bool(np.asarray(self._repl_live).any())):
+            smap, slabs = self._sharded_cache_state()
+            feats, nmiss = self._sharded_fast(
+                self.params, jnp.asarray(np.asarray(idx, np.int32)),
+                jnp.asarray(mask), smap, slabs)
+            check = (dense, idx, mask, nmiss)
+        else:
+            if self.cache is not None:
+                self._admit_cacheable(idx, mask)
+            feats = self._sharded_embed(self.params, jnp.asarray(idx),
+                                        jnp.asarray(mask))
+        logits = self._sharded_dense(self.params, jnp.asarray(dense), feats)
+        return logits, check
 
     # ------------------------------------------------------------- intake
 
@@ -257,7 +452,15 @@ class RecsysEngine:
         f = len(self.modules)
         lb = _next_pow2(max((len(b) for r in wave for b in r.bags),
                             default=1) or 1)
-        bb = min(_next_pow2(len(wave)), self.max_batch)
+        if self._n_shards > 1:
+            # bucket the *per-device* batch: the shard_map program each
+            # device runs has batch Bb/n, and parity with a single-host
+            # engine holds when that per-device batch equals its bucket
+            per = -(-len(wave) // self._n_shards)
+            bb = min(_next_pow2(per),
+                     self.max_batch // self._n_shards) * self._n_shards
+        else:
+            bb = min(_next_pow2(len(wave)), self.max_batch)
         dense = np.zeros((bb, wave[0].dense.shape[0]), np.float32)
         idx = np.zeros((bb, f, lb), np.int32)
         mask = np.zeros((bb, f, lb), np.float32)
@@ -475,6 +678,11 @@ class RecsysEngine:
         dense, idx, mask = self._pad_wave(wave)
         t0 = time.monotonic()
         check = None
+        if self._n_shards > 1:
+            logits, check = self._dispatch_sharded(dense, idx, mask)
+            self._t_first = t0 if self._t_first is None else self._t_first
+            self._inflight.append((wave, logits, t0, check))
+            return
         if isinstance(self.cache, DeviceHotRowCache):
             fast = None if self.cache.record_events \
                 else self._embed_device_fast(idx, mask)
@@ -498,12 +706,23 @@ class RecsysEngine:
             # settle the speculative probe: by reap time the async miss
             # count has materialized, so this blocks on nothing extra
             dense, idx, mask, nmiss = check
-            if int(nmiss):
+            if int(nmiss) and self._n_shards > 1:
+                # some cacheable row was not resident: admit it with exact
+                # accounting, then recompute through the pure programs
+                self._admit_cacheable(idx, mask)
+                feats = self._sharded_embed(self.params, jnp.asarray(idx),
+                                            jnp.asarray(mask))
+                logits = self._sharded_dense(self.params,
+                                             jnp.asarray(dense), feats)
+            elif int(nmiss):
                 feats = self._embed_device(idx, mask)   # exact: admit+count
                 logits = self._dense_fwd(self.params, jnp.asarray(dense),
                                          feats)
             else:
-                self.cache.stats.hits += int((mask > 0).sum())
+                live = mask > 0
+                if self._n_shards > 1:  # only cacheable slots were probed
+                    live = live & np.asarray(self._repl_live)[None, :, None]
+                self.cache.stats.hits += int(live.sum())
         logits = np.asarray(jax.block_until_ready(logits), np.float32)
         t1 = time.monotonic()
         self._t_last = t1

@@ -26,7 +26,6 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax

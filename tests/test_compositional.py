@@ -1,6 +1,5 @@
 """Compositional/hash/path embeddings: semantics, params, factory (paper §2/§4)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,8 @@ from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.compress import ef_psum_grads, init_error_state, quantize_int8
-from repro.dist.sharding import (INFERENCE_OVERRIDES, batch_axes, constrain,
-                                 constrain_batch, fit_template, spec_for)
+from repro.dist.sharding import (batch_axes, constrain, constrain_batch,
+                                 fit_template, spec_for)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, ASSIGNED, SHAPES
+from repro.configs import ARCHS, ASSIGNED
 from repro.configs.common import Shape
 from repro.optim.optimizers import sgd
 from repro.train.loop import init_state, make_train_step

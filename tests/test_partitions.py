@@ -1,13 +1,12 @@
 """Property tests (hypothesis) for complementary partitions — paper §3 + Thm 1."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import (CompositionalEmbedding, codes_for, crt_partitions,
+from repro.core import (codes_for, crt_partitions,
                         generalized_qr_partitions, is_complementary,
                         min_collision_free_m, naive_partition, qr_partitions,
                         qr_embedding)

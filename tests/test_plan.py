@@ -15,7 +15,6 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -362,7 +361,6 @@ def test_from_plan_path_validates(stats):
 def test_dlrm_trains_from_plan(stats):
     """config(plan=...) -> init -> one jitted train step: the end-to-end
     from-plan wiring models/configs/train all share."""
-    from repro.configs import dlrm_criteo
     from repro.data.criteo import CriteoSpec, batch_at
     from repro.train.loop import init_state, make_train_step
 

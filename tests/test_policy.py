@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.dist import accounting
-from repro.dist.compress import (MODES, ef_psum_grads, init_error_state,
+from repro.dist.compress import (ef_psum_grads, init_error_state,
                                  resolve_modes)
 from repro.dist.policy import AUTO, CompressionPolicy, resolve_policy
 from repro.optim.optimizers import leaf_paths

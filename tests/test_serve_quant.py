@@ -1,19 +1,18 @@
 """repro.serve v2: quantization, fused dequant kernel, hot-row cache,
 and the microbatched RecsysEngine (bucket-padding correctness)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EmbeddingSpec, bag_pool, table_rows
+from repro.core import EmbeddingSpec, table_rows
 from repro.kernels import ops, ref
 from repro.kernels.qr_gather import qr_gather_quant
-from repro.models.dcn import DCNConfig, dcn_init, dcn_loss_fn
+from repro.models.dcn import DCNConfig, dcn_init
 from repro.models.dlrm import (DLRMConfig, dlrm_forward, dlrm_init,
-                               dlrm_loss_fn, tables_for)
+                               dlrm_loss_fn)
 from repro.serve.cache import HotRowCache
 from repro.serve.quantize import (dequantize_rows, dequantize_table,
                                   is_quantized_table, memory_report,

@@ -6,7 +6,6 @@ QR-compressed vocab, and train→checkpoint→serve round trip.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
@@ -14,7 +13,7 @@ from repro.core import EmbeddingSpec
 from repro.data.criteo import CriteoSpec, batch_at
 from repro.data.lm import batch_at as lm_batch_at
 from repro.models import lm as lm_mod
-from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn, dlrm_num_params
+from repro.models.dlrm import DLRMConfig, dlrm_init, dlrm_loss_fn
 from repro.models.lm import LMConfig
 from repro.optim.optimizers import adagrad, adam
 from repro.serve.engine import ServeEngine
