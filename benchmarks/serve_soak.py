@@ -79,9 +79,40 @@ def _stream(cfg, spec, batch_at, seed: int, n: int, max_bag: int = 24):
     return out
 
 
+TIMESERIES = os.path.join(ART, "serve_soak_timeseries.csv")
+
+
+def _timeseries(samples: list[dict], lat: list[float]) -> list[dict]:
+    """Fold per-pump snapshots into per-second rows (p99, QPS, hit rate,
+    resident cache bytes) — the CI artifact that localizes a soak
+    regression in time instead of smearing it over the whole run."""
+    import numpy as np
+    rows, prev = [], {"t": 0.0, "waves": 0, "served": 0,
+                      "hits": 0, "lookups": 0}
+    by_sec: dict[int, dict] = {}
+    for s in samples:
+        by_sec[int(s["t"])] = s  # last pump snapshot in each second wins
+    for sec in sorted(by_sec):
+        s = by_sec[sec]
+        window = lat[prev["waves"]:s["waves"]]
+        dt = s["t"] - prev["t"]
+        dlook = s["lookups"] - prev["lookups"]
+        rows.append({
+            "t_s": sec + 1,
+            "p99_ms": (float(np.percentile(window, 99)) * 1e3
+                       if window else 0.0),
+            "qps": (s["served"] - prev["served"]) / dt if dt > 0 else 0.0,
+            "hit_rate": ((s["hits"] - prev["hits"]) / dlook
+                         if dlook > 0 else 0.0),
+            "bytes_cached": s["bytes"],
+        })
+        prev = s
+    return rows
+
+
 def soak(duration_s: float, max_batch: int = 32) -> dict:
     from benchmarks.serve_bench import _build
-    from repro.serve.cache import CacheStats, DeviceHotRowCache
+    from repro.serve.cache import DeviceHotRowCache
     from repro.serve.quantize import quantize_params
     from repro.serve.recsys import RecsysEngine
 
@@ -100,8 +131,9 @@ def soak(duration_s: float, max_batch: int = 32) -> dict:
         for d, b in _stream(cfg, spec, batch_at, warm_seed, CHUNK):
             eng.submit(d, b)
         eng.run_until_drained()
+    # reset_metrics drops the cache traffic counters too (resident bytes
+    # survive) — warm-up never leaks into steady-state hit rates
     eng.reset_metrics()
-    eng.cache.stats = CacheStats(bytes_cached=eng.cache.stats.bytes_cached)
 
     # arm the hang guard only now: build + jit warmup above are allowed
     # to be slow (compilation), the streaming loop below is not
@@ -113,6 +145,7 @@ def soak(duration_s: float, max_batch: int = 32) -> dict:
     # genuinely fresh chunk every 8th pump so cold rows keep flowing
     # through the miss/admission path inside the timed window
     bytes_samples = []
+    pump_samples = []
     t0 = time.monotonic()
     pump, served = 0, 0
     while time.monotonic() - t0 < duration_s:
@@ -123,7 +156,16 @@ def soak(duration_s: float, max_batch: int = 32) -> dict:
         while eng._queue or eng._inflight:
             served += len(eng.step())
         bytes_samples.append(eng.cache.stats.bytes_cached)
+        pump_samples.append({
+            "t": time.monotonic() - t0,
+            "waves": len(eng.wave_latencies_s),
+            "served": served,
+            "hits": eng.cache.stats.hits,
+            "lookups": eng.cache.stats.lookups,
+            "bytes": eng.cache.stats.bytes_cached,
+        })
     wall = time.monotonic() - t0
+    ts_rows = _timeseries(pump_samples, eng.wave_latencies_s)
 
     m = eng.metrics()
     # memory-creep guard: the Zipf tail legitimately trickles admissions
@@ -149,6 +191,7 @@ def soak(duration_s: float, max_batch: int = 32) -> dict:
         "max_batch": max_batch,
         "batching": "continuous",
         "mode": "int8",
+        "timeseries": ts_rows,
     }
 
 
@@ -156,6 +199,9 @@ def check(report: dict, baseline: dict | None) -> list[tuple[str, str]]:
     failures = []
     if report["served"] < 1:
         failures.append(("served", "soak served zero requests"))
+    if not report.get("timeseries"):
+        failures.append(("timeseries", "soak produced no per-second "
+                                       "timeseries rows"))
     if not (report["hit_rate"] or 0) > 0.5:
         failures.append(("hit_rate", f"hit rate {report['hit_rate']} "
                                      "never saturated under Zipf traffic"))
@@ -183,6 +229,9 @@ def main(argv=None) -> int:
     ap.add_argument("--update-baseline", action="store_true")
     ap.add_argument("--out", default=os.path.join(ART,
                                                   "BENCH_serve_soak.json"))
+    ap.add_argument("--timeseries-out", default=TIMESERIES,
+                    help="per-second timeseries CSV "
+                         "(t_s,p99_ms,qps,hit_rate,bytes_cached)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -211,6 +260,11 @@ def main(argv=None) -> int:
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, default=float)
+    with open(args.timeseries_out, "w") as f:
+        f.write("t_s,p99_ms,qps,hit_rate,bytes_cached\n")
+        for r in report["timeseries"]:
+            f.write(f"{r['t_s']},{r['p99_ms']:.3f},{r['qps']:.1f},"
+                    f"{r['hit_rate']:.4f},{r['bytes_cached']}\n")
     if args.update_baseline:
         os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
         with open(BASELINE, "w") as f:

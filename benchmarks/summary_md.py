@@ -85,6 +85,57 @@ def _row_table(rows: list) -> list[str]:
     return out
 
 
+def _stage_table(breakdown: dict) -> list[str]:
+    """Per-lane stage-latency breakdown (the obs lane's wave anatomy:
+    where a wave actually spends its time)."""
+    out = []
+    for lane, stages in breakdown.items():
+        rows = [(s, d) for s, d in stages.items()
+                if isinstance(d, dict) and d.get("count")]
+        if not rows:
+            continue
+        total = sum(d["sum"] for s, d in rows
+                    if s not in ("queue_wait", "pad")) or 1.0
+        out += [f"**stage breakdown — {lane}**", "",
+                "| stage | mean ms | p99 ms | share |", "|---|---|---|---|"]
+        for s, d in rows:
+            mean_ms = d["sum"] * 1e3 / d["count"]
+            share = ("" if s in ("queue_wait", "pad")
+                     else f"{d['sum'] / total:.1%}")
+            out.append(f"| {s} | {mean_ms:.3f} | "
+                       f"{d.get('p99', 0) * 1e3:.3f} | {share} |")
+        out.append("")
+    return out
+
+
+def _collision_md(tables: dict) -> list[str]:
+    """Predicted-vs-observed collision-mass table per arch — the
+    planner's proxy against what serving traffic actually measured."""
+    out = []
+    for arch, rows in tables.items():
+        rows = [r for r in rows if isinstance(r, dict)]
+        if not rows:
+            continue
+        out += [f"**collision mass (predicted vs observed) — {arch}**", "",
+                "| feature | kind | dim | lookups | predicted | observed |",
+                "|---|---|---|---|---|---|"]
+        for r in rows:
+            out.append(
+                f"| {r.get('feature')} | {r.get('kind', '')} | "
+                f"{r.get('dim', '')} | {_fmt(r.get('observed_lookups'))} | "
+                f"{_sci(r.get('predicted_collision_mass'))} | "
+                f"{_sci(r.get('measured_collision_mass'))} |")
+        out.append("")
+    return out
+
+
+def _sci(v) -> str:
+    try:
+        return f"{float(v):.2e}"
+    except (TypeError, ValueError):
+        return ""
+
+
 def section(path: str) -> list[str]:
     name = os.path.basename(path)
     try:
@@ -109,6 +160,10 @@ def section(path: str) -> list[str]:
     table = _row_table(report.get("rows", []))
     if table:
         lines += table + [""]
+    if isinstance(report.get("stage_breakdown"), dict):
+        lines += _stage_table(report["stage_breakdown"])
+    if isinstance(report.get("collision_tables"), dict):
+        lines += _collision_md(report["collision_tables"])
     return lines
 
 

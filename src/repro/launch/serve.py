@@ -69,6 +69,11 @@ def _serve_rec(mod, args):
     from ..serve.recsys import RecsysEngine
     from .plan_cli import resolve_plan_args
 
+    obs = None
+    if args.trace or args.metrics_out:
+        from ..obs import Obs
+        obs = Obs(trace=bool(args.trace), collisions=True)
+
     plan = resolve_plan_args(mod, args)
     cfg = (mod.config(reduced=True, plan=plan) if plan is not None
            else mod.config(reduced=True))
@@ -112,7 +117,8 @@ def _serve_rec(mod, args):
                   f"(must be a multiple of --mesh-devices {n})")
         engine = RecsysEngine(cfg, qparams, max_batch=batch,
                               cache=cache, batching=args.batching,
-                              mesh_devices=args.mesh_devices, plan=plan)
+                              mesh_devices=args.mesh_devices, plan=plan,
+                              obs=obs)
         pl = engine.placement
         rep = memory_report(params, qparams, placement=pl)
         print(f"  placement: {len(pl.sharded)} sharded / "
@@ -123,7 +129,7 @@ def _serve_rec(mod, args):
         mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
         engine = RecsysEngine(cfg, qparams, max_batch=args.batch_size,
                               cache=cache, mesh=mesh,
-                              batching=args.batching)
+                              batching=args.batching, obs=obs)
 
     # Zipfian synthetic request stream (the criteo generator's skew)
     rng = np.random.default_rng(0)
@@ -145,6 +151,16 @@ def _serve_rec(mod, args):
         print(f"  cache: hit_rate {m['cache']['hit_rate']:.3f} "
               f"({m['cache']['hits']}/{m['cache']['lookups']}), "
               f"{m['cache']['bytes_cached']} B resident")
+    if obs is not None:
+        ss = engine.stage_summary()
+        parts = "  ".join(
+            f"{s} {ss[s]['sum'] * 1e3 / max(1, ss[s]['count']):.2f}ms"
+            for s in ("probe", "dense", "inflight", "miss_gather", "flush"))
+        print(f"  stages (mean/wave): {parts}")
+        obs.save(metrics_path=args.metrics_out, trace_path=args.trace)
+        for p in (args.metrics_out, args.trace):
+            if p:
+                print(f"  obs: wrote {p}")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: score {done[uid].score:+.4f}")
 
@@ -185,6 +201,13 @@ def main():
                          "devices (plan-aware placement: replicate small "
                          "sub-tables, row-shard big ones; batch size must "
                          "be a multiple of it)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of per-wave "
+                         "stage timelines to PATH (rec family; implies "
+                         "obs on)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry as JSONL to PATH "
+                         "(rec family; implies obs on)")
     from .plan_cli import add_plan_args
     add_plan_args(ap)
     args = ap.parse_args()

@@ -30,6 +30,12 @@ def main():
                     help="gradient-compression policy for the explicit "
                          "data-parallel step (repro.dist.policy); omit for "
                          "the plain pjit step")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of per-step "
+                         "spans to PATH (implies obs on)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry as JSONL to PATH "
+                         "(implies obs on)")
     add_plan_args(ap)
     args = ap.parse_args()
 
@@ -70,15 +76,30 @@ def main():
     else:
         state = init_state(params, api.optimizer)
         step = make_train_step(api.loss_fn, api.optimizer)
+    obs = step_wire = None
+    if args.trace or args.metrics_out:
+        from ..obs import Obs
+        obs = Obs(trace=bool(args.trace))
+        if args.compress_policy is not None:
+            # accounted per-leaf wire bytes of one dp step -> counters
+            from ..dist.accounting import grad_wire_bytes
+            step_wire = grad_wire_bytes(params, args.compress_policy,
+                                        jax.device_count())
     tc = TrainConfig(num_steps=args.steps, log_every=args.log_every,
                      ckpt_every=max(50, args.steps // 4), ckpt_dir=args.ckpt_dir)
-    trainer = Trainer(step, tc, batch_at=lambda s: api.batch_fn(s, shape))
+    trainer = Trainer(step, tc, batch_at=lambda s: api.batch_fn(s, shape),
+                      obs=obs, step_wire=step_wire)
     state = trainer.resume_or(state)
     state, history = trainer.run(state)
     for step, loss in history:
         print(f"step {step:5d}  loss {loss:.4f}")
     if trainer.straggler_events:
         print("straggler events:", trainer.straggler_events)
+    if obs is not None:
+        obs.save(metrics_path=args.metrics_out, trace_path=args.trace)
+        for p in (args.metrics_out, args.trace):
+            if p:
+                print(f"obs: wrote {p}")
 
 
 if __name__ == "__main__":

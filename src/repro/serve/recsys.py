@@ -56,7 +56,7 @@ from ..core.compositional import is_quantized_table
 from ..models.dcn import DCNConfig, dcn_forward_from_features
 from ..models.dlrm import (DLRMConfig, dlrm_forward_from_features,
                            embed_features, tables_for)
-from .cache import DeviceHotRowCache, HotRowCache
+from .cache import CacheStats, DeviceHotRowCache, HotRowCache
 
 __all__ = ["RecRequest", "RecsysEngine", "BATCHING_MODES"]
 
@@ -76,6 +76,16 @@ class RecRequest:
     bags: list[list[int]]          # one multi-hot id bag per categorical
     score: Optional[float] = None
     done: bool = False
+    t_submit: Optional[float] = None   # monotonic enqueue time (obs-on only)
+
+
+# stage names: the five partition stages tile the measured wave-latency
+# interval [dispatch t0, reap t1] with contiguous boundary timestamps, so
+# their sum equals the recorded latency by construction (the serve_bench
+# obs lane asserts it within 10%); queue_wait and pad happen before t0
+# and ride along as extra, non-partition stages
+STAGE_PARTITION = ("probe", "dense", "inflight", "miss_gather", "flush")
+STAGES = ("queue_wait", "pad") + STAGE_PARTITION
 
 
 def _next_pow2(n: int) -> int:
@@ -105,7 +115,7 @@ class RecsysEngine:
                  batching: str = "continuous", max_inflight: int = 2,
                  lookahead: Optional[int] = None,
                  mesh_devices: Optional[int] = None, placement=None,
-                 plan=None):
+                 plan=None, obs=None):
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching={batching!r} not in {BATCHING_MODES}")
         self.cfg = cfg
@@ -221,6 +231,31 @@ class RecsysEngine:
         self.buckets_seen: set[tuple[int, int]] = set()
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+
+        # observability: everything below is skipped when obs is None
+        # (the off-by-default contract — obs-off waves take zero extra
+        # clock reads and zero registry work, which is how the obs-on
+        # lane's 2% QPS budget stays honest as a comparison)
+        self._obs = obs
+        if obs is not None:
+            obs.attach_collisions(cfg.table_sizes)
+            # label handles bound once: the hot path never hashes a dict
+            hs = obs.histogram("serve_stage_seconds",
+                               "per-wave stage durations (see STAGES)")
+            self._h_stage = {s: hs.labels(stage=s) for s in STAGES}
+            self._h_wave = obs.histogram(
+                "serve_wave_latency_seconds",
+                "dispatch->ready wall time per wave").labels()
+            self._c_req = obs.counter(
+                "serve_requests_total", "requests scored").labels()
+            self._c_waves = obs.counter(
+                "serve_waves_total", "waves dispatched").labels()
+            self._c_wire = obs.counter(
+                "serve_wire_bytes_total",
+                "serve-exchange bytes moved between devices").labels(
+                    collective="serve_exchange") \
+                if self._n_shards > 1 else None
+            self._wire_by_bucket: dict[tuple[int, int], int] = {}
 
     # ------------------------------------------------------------- sharding
 
@@ -373,8 +408,9 @@ class RecsysEngine:
 
     def _dispatch_sharded(self, dense, idx, mask):
         """Dispatch one wave through the sharded programs; returns
-        ``(logits, check)`` with the same speculative-probe contract as
-        the single-host device-cache path."""
+        ``(logits, check, ta)`` with the same speculative-probe contract
+        as the single-host device-cache path (``ta`` is the probe/dense
+        stage boundary timestamp, None when obs is off)."""
         check = None
         if (isinstance(self.cache, DeviceHotRowCache)
                 and not self.cache.record_events
@@ -390,8 +426,9 @@ class RecsysEngine:
                 self._admit_cacheable(idx, mask)
             feats = self._sharded_embed(self.params, jnp.asarray(idx),
                                         jnp.asarray(mask))
+        ta = time.monotonic() if self._obs is not None else None
         logits = self._sharded_dense(self.params, jnp.asarray(dense), feats)
-        return logits, check
+        return logits, check, ta
 
     # ------------------------------------------------------------- intake
 
@@ -406,7 +443,8 @@ class RecsysEngine:
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(RecRequest(
-            uid, np.asarray(dense, np.float32), [list(b) for b in bags]))
+            uid, np.asarray(dense, np.float32), [list(b) for b in bags],
+            t_submit=(time.monotonic() if self._obs is not None else None)))
         return uid
 
     # ------------------------------------------------------------- batching
@@ -675,33 +713,56 @@ class RecsysEngine:
     # ------------------------------------------------------------- execution
 
     def _dispatch(self, wave: list[RecRequest]) -> None:
+        obs = self._obs
+        tq = time.monotonic() if obs is not None else None
         dense, idx, mask = self._pad_wave(wave)
         t0 = time.monotonic()
+        if obs is not None and obs.collisions is not None:
+            # raw served ids for the measured collision mass; idx/mask
+            # are this wave's own buffers, so holding references is safe
+            obs.collisions.record(idx, mask, live_rows=len(wave))
         check = None
         if self._n_shards > 1:
-            logits, check = self._dispatch_sharded(dense, idx, mask)
-            self._t_first = t0 if self._t_first is None else self._t_first
-            self._inflight.append((wave, logits, t0, check))
-            return
-        if isinstance(self.cache, DeviceHotRowCache):
-            fast = None if self.cache.record_events \
-                else self._embed_device_fast(idx, mask)
-            if fast is not None:
-                feats, nmiss = fast
-                check = (dense, idx, mask, nmiss)
-            else:
-                feats = self._embed_device(idx, mask)
-        elif self.cache is not None:
-            feats = jnp.asarray(self._embed_cached(idx, mask))
+            logits, check, ta = self._dispatch_sharded(dense, idx, mask)
         else:
-            feats = self._embed_fwd(self.params, jnp.asarray(idx),
-                                    jnp.asarray(mask))
-        logits = self._dense_fwd(self.params, jnp.asarray(dense), feats)
+            if isinstance(self.cache, DeviceHotRowCache):
+                fast = None if self.cache.record_events \
+                    else self._embed_device_fast(idx, mask)
+                if fast is not None:
+                    feats, nmiss = fast
+                    check = (dense, idx, mask, nmiss)
+                else:
+                    feats = self._embed_device(idx, mask)
+            elif self.cache is not None:
+                feats = jnp.asarray(self._embed_cached(idx, mask))
+            else:
+                feats = self._embed_fwd(self.params, jnp.asarray(idx),
+                                        jnp.asarray(mask))
+            ta = time.monotonic() if obs is not None else None
+            logits = self._dense_fwd(self.params, jnp.asarray(dense), feats)
         self._t_first = t0 if self._t_first is None else self._t_first
-        self._inflight.append((wave, logits, t0, check))
+        oi = None
+        if obs is not None:
+            tb = time.monotonic()
+            waits = [tq - r.t_submit for r in wave if r.t_submit is not None]
+            oi = {"tq": tq, "t0": t0, "ta": ta, "tb": tb,
+                  "queue_wait": max(waits) if waits else 0.0,
+                  "n": len(wave), "bb": idx.shape[0], "lb": idx.shape[2]}
+            if self._c_wire is not None:
+                bucket = (idx.shape[0] // self._n_shards, idx.shape[2])
+                wb = self._wire_by_bucket.get(bucket)
+                if wb is None:
+                    from ..dist.accounting import serve_wave_wire_bytes
+                    wb = int(serve_wave_wire_bytes(
+                        self.placement, bucket[0],
+                        bucket[1])["total_bytes"])
+                    self._wire_by_bucket[bucket] = wb
+                self._c_wire.inc(wb)
+        self._inflight.append((wave, logits, t0, check, oi))
 
     def _reap(self) -> list[RecRequest]:
-        wave, logits, t0, check = self._inflight.popleft()
+        wave, logits, t0, check, oi = self._inflight.popleft()
+        tc = time.monotonic() if oi is not None else None
         if check is not None:
             # settle the speculative probe: by reap time the async miss
             # count has materialized, so this blocks on nothing extra
@@ -723,11 +784,14 @@ class RecsysEngine:
                 if self._n_shards > 1:  # only cacheable slots were probed
                     live = live & np.asarray(self._repl_live)[None, :, None]
                 self.cache.stats.hits += int(live.sum())
+        td = time.monotonic() if oi is not None else None
         logits = np.asarray(jax.block_until_ready(logits), np.float32)
         t1 = time.monotonic()
         self._t_last = t1
         self.wave_latencies_s.append(t1 - t0)
         self.wave_sizes.append(len(wave))
+        if oi is not None:
+            self._record_wave(oi, tc, td, t1)
         for b, r in enumerate(wave):  # padded rows beyond len(wave) discarded
             r.score = float(logits[b])
             r.done = True
@@ -757,12 +821,66 @@ class RecsysEngine:
 
     # ------------------------------------------------------------- metrics
 
+    def _record_wave(self, oi: dict, tc: float, td: float, t1: float) -> None:
+        """Fold one reaped wave's boundary timestamps into the registry
+        (and tracer).  The five partition stages tile [t0, t1] exactly:
+        probe (embed/cache-probe dispatch), dense (dense dispatch),
+        inflight (async pipeline gap until reap), miss_gather (settling
+        the speculative probe — recompute on miss, accounting on hit),
+        flush (the block_until_ready sync)."""
+        obs = self._obs
+        t0, ta, tb = oi["t0"], oi["ta"], oi["tb"]
+        stages = (("queue_wait", oi["tq"] - oi["queue_wait"],
+                   oi["queue_wait"]),
+                  ("pad", oi["tq"], t0 - oi["tq"]),
+                  ("probe", t0, ta - t0),
+                  ("dense", ta, tb - ta),
+                  ("inflight", tb, tc - tb),
+                  ("miss_gather", tc, td - tc),
+                  ("flush", td, t1 - td))
+        for name, _, dur in stages:
+            self._h_stage[name].observe(dur)
+        self._h_wave.observe(t1 - t0)
+        self._c_req.inc(oi["n"])
+        self._c_waves.inc()
+        if obs.tracer is not None:
+            tr = obs.tracer
+            tr.complete("wave", t0, t1 - t0, requests=oi["n"],
+                        batch=oi["bb"], bag=oi["lb"])
+            for name, ts, dur in stages:
+                tr.complete(name, ts, dur)
+
+    def stage_summary(self) -> dict:
+        """Per-stage latency summaries plus the partition check the obs
+        lane asserts: the five partition stages must sum to the recorded
+        wave latency (same clock reads, contiguous boundaries)."""
+        if self._obs is None:
+            raise RuntimeError("stage_summary() needs an Obs-enabled engine")
+        out = {s: self._h_stage[s].summary() for s in STAGES}
+        stage_sum = sum(out[s]["sum"] for s in STAGE_PARTITION)
+        lat = self._h_wave.summary()
+        out["partition"] = {
+            "stage_sum_s": stage_sum,
+            "latency_sum_s": lat["sum"],
+            "ratio": (stage_sum / lat["sum"]) if lat["sum"] else 1.0,
+        }
+        return out
+
     def reset_metrics(self) -> None:
-        """Drop timing history (benches call this after bucket warm-up so
-        p50/p99 measure steady-state serving, not jit compilation)."""
+        """Drop timing history AND traffic counters (benches call this
+        after bucket warm-up so p50/p99 — and cache hit rates — measure
+        steady-state serving, not jit compilation or cold fills).  Cache
+        residency (``bytes_cached``) survives: the rows are still
+        resident, only the traffic counters restart.  Obs serve_* series
+        reset too; bound label handles stay live."""
         self.wave_latencies_s = []
         self.wave_sizes = []
         self._t_first = self._t_last = None
+        if self.cache is not None:
+            self.cache.stats = CacheStats(
+                bytes_cached=self.cache.stats.bytes_cached)
+        if self._obs is not None:
+            self._obs.registry.reset(prefix="serve_")
 
     def metrics(self) -> dict:
         lat = np.asarray(self.wave_latencies_s or [0.0])
@@ -780,4 +898,11 @@ class RecsysEngine:
         }
         if self.cache is not None:
             out["cache"] = self.cache.stats.as_dict()
+            if self._obs is not None:
+                # fold residency + traffic into gauges at scrape time
+                # (never per wave: this walk is not hot-path work)
+                g = self._obs.gauge("serve_cache_stat",
+                                    "hot-row cache stats at last scrape")
+                for k, v in out["cache"].items():
+                    g.set(float(v), stat=k)
         return out

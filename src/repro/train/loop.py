@@ -351,13 +351,45 @@ def init_fsdp_state(params, optimizer: Optimizer, mesh, *, policy="auto",
 
 
 class Trainer:
-    def __init__(self, train_step, cfg: TrainConfig, *, batch_at: Callable[[int], Any]):
+    def __init__(self, train_step, cfg: TrainConfig, *,
+                 batch_at: Callable[[int], Any], obs=None, step_wire=None):
+        """``obs`` (an ``repro.obs.Obs``) turns on per-step spans and
+        counters; ``step_wire`` is an accounted wire-byte report for one
+        step (``dist.accounting.grad_wire_bytes`` /
+        ``dp_step_wire_bytes`` / ``fsdp_step_wire_bytes`` output) — its
+        per-leaf entries become per-leaf wire counters incremented every
+        step, so the registry shows what the collectives actually carry.
+        Both default off; the obs-off loop is unchanged."""
         self.train_step = jax.jit(train_step)
         self.cfg = cfg
         self.batch_at = batch_at
         self.checkpointer = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
                              if cfg.ckpt_dir else None)
         self.straggler_events: list[tuple[int, float]] = []
+        self._obs = obs
+        if obs is not None:
+            self._h_step = obs.histogram(
+                "train_step_seconds", "per-step wall time").labels()
+            self._c_steps = obs.counter(
+                "train_steps_total", "optimizer steps taken").labels()
+            self._c_strag = obs.counter(
+                "train_straggler_events_total",
+                "steps slower than watchdog_factor x running median").labels()
+            self._wire_handles: list[tuple[Any, float]] = []
+            if step_wire is not None:
+                c = obs.counter(
+                    "train_wire_bytes_total",
+                    "accounted collective wire bytes (per leaf)")
+                per_leaf = step_wire.get("per_leaf") or []
+                for e in per_leaf:
+                    self._wire_handles.append(
+                        (c.labels(leaf=e["path"], mode=e["mode"]),
+                         float(e["wire_bytes"])))
+                accounted = sum(b for _, b in self._wire_handles)
+                rest = float(step_wire.get("total_bytes", 0.0)) - accounted
+                if rest > 0:  # param gathers / scalar overhead / no-leaf
+                    self._wire_handles.append(
+                        (c.labels(leaf="_other", mode="aggregate"), rest))
 
     def resume_or(self, state):
         """Resume from the newest valid checkpoint, else the given state."""
@@ -380,11 +412,22 @@ class Trainer:
             state, metrics = self.train_step(state, batch)
             jax.block_until_ready(metrics["loss"])
             dt = time.monotonic() - t0
+            straggled = False
             if len(durations) >= 5:
                 med = statistics.median(durations[-50:])
                 if dt > cfg.watchdog_factor * med:
                     self.straggler_events.append((step, dt / med))
+                    straggled = True
             durations.append(dt)
+            if self._obs is not None:
+                self._h_step.observe(dt)
+                self._c_steps.inc()
+                if straggled:
+                    self._c_strag.inc()
+                for h, b in self._wire_handles:
+                    h.inc(b)
+                if self._obs.tracer is not None:
+                    self._obs.tracer.complete("train_step", t0, dt, step=step)
             if step % cfg.log_every == 0 or step == cfg.num_steps - 1:
                 history.append((step, float(metrics["loss"])))
             if self.checkpointer and (step + 1) % cfg.ckpt_every == 0:
