@@ -129,6 +129,23 @@ def _collision_md(tables: dict) -> list[str]:
     return out
 
 
+def _recovery_table(rows: list) -> list[str]:
+    """Warm-vs-cold loss recovery after a plan swap (the drift bench's
+    lane 5): eval loss per train step for the migrated warm start against
+    a cold re-init of the same re-solved plan."""
+    rows = [r for r in rows if isinstance(r, dict) and "step" in r]
+    if not rows:
+        return []
+    out = ["**loss recovery after re-plan (warm migrate vs cold re-init)**",
+           "", "| step | warm | cold | warm - cold |", "|---|---|---|---|"]
+    for r in rows[:_MAX_ROWS]:
+        w, c = r.get("loss_warm"), r.get("loss_cold")
+        delta = "" if w is None or c is None else f"{w - c:+.4f}"
+        out.append(f"| {r['step']} | {_fmt(w)} | {_fmt(c)} | {delta} |")
+    out.append("")
+    return out
+
+
 def _sci(v) -> str:
     try:
         return f"{float(v):.2e}"
@@ -164,6 +181,8 @@ def section(path: str) -> list[str]:
         lines += _stage_table(report["stage_breakdown"])
     if isinstance(report.get("collision_tables"), dict):
         lines += _collision_md(report["collision_tables"])
+    if isinstance(report.get("recovery"), list):
+        lines += _recovery_table(report["recovery"])
     return lines
 
 

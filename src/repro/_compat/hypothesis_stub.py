@@ -3,7 +3,8 @@ property tests use, installed by ``tests/conftest.py`` ONLY when the real
 package is missing (the CI image has it; some sandboxes don't).
 
 Supported surface: ``given``, ``settings(max_examples=, deadline=)`` and
-``strategies.integers / lists / sampled_from / data``.  Examples are drawn
+``strategies.integers / lists / sampled_from / booleans / one_of / builds
+/ data``.  Examples are drawn
 from a PRNG seeded per test name, so runs are deterministic; integer
 strategies emit their bounds as the first two examples so edge cases are
 always exercised.  No shrinking — on failure the stub re-raises with the
@@ -56,6 +57,30 @@ class _Lists(_Strategy):
         return [self.elem.example(rng, 2) for _ in range(n)]
 
 
+class _OneOf(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng, index):
+        # early examples walk the branches in order so every alternative
+        # is exercised; later ones pick a branch at random
+        if index < len(self.options):
+            return self.options[index].example(rng, 0)
+        return rng.choice(self.options).example(rng, 2)
+
+
+class _Builds(_Strategy):
+    def __init__(self, target, arg_strats, kwarg_strats):
+        self.target = target
+        self.arg_strats, self.kwarg_strats = arg_strats, kwarg_strats
+
+    def example(self, rng, index):
+        args = [s.example(rng, index) for s in self.arg_strats]
+        kwargs = {k: s.example(rng, index)
+                  for k, s in self.kwarg_strats.items()}
+        return self.target(*args, **kwargs)
+
+
 class DataObject:
     """Lazily draws further examples mid-test (``st.data()``)."""
 
@@ -88,6 +113,22 @@ class strategies:  # mirrors `from hypothesis import strategies as st`
     @staticmethod
     def sampled_from(seq):
         return _SampledFrom(seq)
+
+    @staticmethod
+    def booleans():
+        return _SampledFrom([False, True])
+
+    @staticmethod
+    def one_of(*options):
+        return _OneOf(options)
+
+    @staticmethod
+    def builds(target, *args, **kwargs):
+        return _Builds(target, list(args), dict(kwargs))
+
+    @staticmethod
+    def just(value):
+        return _SampledFrom([value])
 
     @staticmethod
     def data():
@@ -140,7 +181,8 @@ def install():
     mod.given = given
     mod.settings = settings
     st_mod = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "lists", "sampled_from", "data"):
+    for name in ("integers", "lists", "sampled_from", "booleans", "one_of",
+                 "builds", "just", "data"):
         setattr(st_mod, name, getattr(strategies, name))
     mod.strategies = st_mod
     mod.__stub__ = True

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CriteoSpec", "KAGGLE_TABLE_SIZES", "batch_at", "read_tsv"]
+__all__ = ["CriteoSpec", "DriftSpec", "KAGGLE_TABLE_SIZES", "batch_at",
+           "drifted_batch_at", "read_tsv"]
 
 # Criteo Kaggle per-feature cardinalities (rounded, public statistics).
 KAGGLE_TABLE_SIZES = (
@@ -54,6 +55,82 @@ def batch_at(seed: int, step: int, batch_size: int, spec: CriteoSpec):
     sparse = jnp.minimum(sparse, sizes - 1)
 
     # planted logistic signal: dense weights + category harmonics
+    n_tab = len(spec.table_sizes)
+    w_dense = _planted(seed, "wd", (spec.dense_dim,))
+    a = _planted(seed, "a", (n_tab,))
+    c = _planted(seed, "c", (n_tab,)) * 5.0
+    score = dense @ w_dense + (jnp.sin(sparse * c) * a).sum(-1)
+    noise = spec.noise * jax.random.normal(kl, (batch_size,))
+    label = (score + noise > 0).astype(jnp.float32)
+    return {"dense": dense, "sparse": sparse, "label": label}
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """Injected traffic drift for the synthetic stream (the ROADMAP's
+    streaming-drift scenario).  Two mechanisms, both stateless per
+    ``(seed, step)`` so drifted streams replay exactly like ``batch_at``:
+
+    * **Zipf shift** — from ``shift_step`` on, the popularity head
+      *rotates* by ``rotate_frac`` of each table (yesterday's hot ids go
+      cold, previously-cold mid-range ids become the head) and the zipf
+      exponent moves to ``zipf_after``.  A flatter exponent means more
+      effective categories, which is what actually moves measured
+      collision mass on hashed/QR tables — pure rotation alone barely
+      does, because ``x mod m`` maps a consecutive hot head to distinct
+      rows wherever it starts.
+    * **flash crowd** — during ``[crowd_step, crowd_step + crowd_len)``
+      a ``crowd_frac`` share of every feature's draws redirects to one
+      fixed (previously cold) crowd id per feature.
+    """
+    shift_step: int | None = None
+    rotate_frac: float = 0.5
+    zipf_after: float | None = None
+    crowd_step: int | None = None
+    crowd_len: int = 0
+    crowd_frac: float = 0.0
+
+    def active(self, step: int) -> bool:
+        shifted = self.shift_step is not None and step >= self.shift_step
+        crowded = (self.crowd_step is not None and self.crowd_frac > 0
+                   and self.crowd_step <= step < self.crowd_step
+                   + self.crowd_len)
+        return shifted or crowded
+
+
+def drifted_batch_at(seed: int, step: int, batch_size: int,
+                     spec: CriteoSpec, drift: DriftSpec | None = None):
+    """``batch_at`` with ``drift`` applied to the categorical draws.
+
+    Inactive drift (pre-``shift_step``, outside the crowd window, or
+    ``drift=None``) is bitwise ``batch_at`` — same keys, same op order.
+    When active, the drifted ids feed the *same* planted logistic label
+    model, so the labels reflect the traffic actually drawn and a model
+    trained pre-drift has genuinely stale embeddings to recover from.
+    """
+    if drift is None or not drift.active(step):
+        return batch_at(seed, step, batch_size, spec)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kd, ks, kl = jax.random.split(key, 3)
+    dense = jax.random.normal(kd, (batch_size, spec.dense_dim))
+    u = jax.random.uniform(ks, (batch_size, len(spec.table_sizes)))
+    sizes = jnp.asarray(spec.table_sizes)
+    shifted = drift.shift_step is not None and step >= drift.shift_step
+    zipf = spec.zipf
+    if shifted and drift.zipf_after is not None:
+        zipf = drift.zipf_after
+    sparse = jnp.floor((u ** zipf) * sizes).astype(jnp.int32)
+    sparse = jnp.minimum(sparse, sizes - 1)
+    if shifted and drift.rotate_frac:
+        off = jnp.floor(sizes * drift.rotate_frac).astype(jnp.int32)
+        sparse = (sparse + off[None, :]) % sizes
+    if (drift.crowd_step is not None and drift.crowd_frac > 0
+            and drift.crowd_step <= step < drift.crowd_step + drift.crowd_len):
+        kc = jax.random.fold_in(ks, 1)
+        pick = jax.random.uniform(kc, sparse.shape) < drift.crowd_frac
+        crowd_ids = ((2 * sizes) // 3).astype(jnp.int32)
+        sparse = jnp.where(pick, crowd_ids[None, :], sparse)
+
     n_tab = len(spec.table_sizes)
     w_dense = _planted(seed, "wd", (spec.dense_dim,))
     a = _planted(seed, "a", (n_tab,))

@@ -70,8 +70,10 @@ def _serve_rec(mod, args):
     from .plan_cli import resolve_plan_args
 
     obs = None
-    if args.trace or args.metrics_out:
+    if args.trace or args.metrics_out or args.replan_interval:
         from ..obs import Obs
+        # the replan controller reads collision telemetry, so --replan-
+        # interval forces obs on even without --trace/--metrics-out
         obs = Obs(trace=bool(args.trace), collisions=True)
 
     plan = resolve_plan_args(mod, args)
@@ -131,18 +133,51 @@ def _serve_rec(mod, args):
                               cache=cache, mesh=mesh,
                               batching=args.batching, obs=obs)
 
+    ctrl = None
+    if args.replan_interval:
+        from ..online import ReplanController
+        from ..plan.planner import full_table_bytes
+        if args.mesh_devices and args.mesh_devices > 1:
+            raise SystemExit("--replan-interval is single-host "
+                             "(swap_plan contract); drop --mesh-devices")
+        # re-solve budget: explicit flag > the plan's own budget > the
+        # uncompressed f32 footprint (i.e. "no tighter than full tables")
+        if args.replan_budget_mb is not None:
+            budget = int(args.replan_budget_mb * 2 ** 20)
+        elif plan is not None:
+            budget = plan.budget_bytes
+        else:
+            budget = full_table_bytes(cfg.table_sizes, cfg.emb_dim)
+        ctrl = ReplanController(engine, budget_bytes=budget,
+                                quantize=args.quantize)
+        print(f"  replan: every {args.replan_interval} requests, "
+              f"budget {budget} B")
+
     # Zipfian synthetic request stream (the criteo generator's skew)
     rng = np.random.default_rng(0)
     sizes = cfg.table_sizes
-    for i in range(args.requests):
-        dense = rng.normal(size=cfg.dense_dim)
-        bags = []
-        for s in sizes:
-            ln = int(rng.integers(1, args.max_bag + 1))
-            u = rng.random(ln)
-            bags.append(list((np.floor((u ** 1.5) * s)).astype(np.int64)))
-        engine.submit(dense, bags)
-    done = engine.run_until_drained()
+    done = {}
+    interval = args.replan_interval or args.requests
+    for start in range(0, args.requests, interval):
+        for i in range(start, min(start + interval, args.requests)):
+            dense = rng.normal(size=cfg.dense_dim)
+            bags = []
+            for s in sizes:
+                ln = int(rng.integers(1, args.max_bag + 1))
+                u = rng.random(ln)
+                bags.append(list((np.floor((u ** 1.5) * s)).astype(np.int64)))
+            engine.submit(dense, bags)
+        done.update(engine.run_until_drained())
+        if ctrl is not None:
+            decision = ctrl.check()
+            if decision is not None and decision.fired:
+                rep = ctrl.replans[-1]
+                print(f"  replan: drift on features {decision.over} -> "
+                      f"swapped plan ({rep['plan']['total_bytes']} B, "
+                      f"kinds {rep['plan']['kinds']})")
+    if ctrl is not None:
+        print(f"  replan: {ctrl.checks} windows checked, "
+              f"{len(ctrl.replans)} plan swaps")
     m = engine.metrics()
     print(f"{args.arch}: served {len(done)} requests in {m['waves']} waves | "
           f"p50 {m['p50_ms']:.1f} ms  p99 {m['p99_ms']:.1f} ms  "
@@ -208,6 +243,16 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the metrics registry as JSONL to PATH "
                          "(rec family; implies obs on)")
+    ap.add_argument("--replan-interval", type=int, default=None,
+                    help="run the online drift controller: drain and run "
+                         "one detector check every N requests, re-solving "
+                         "and hot-swapping the plan when drift persists "
+                         "(rec family, single-host; implies obs on; off "
+                         "by default)")
+    ap.add_argument("--replan-budget-mb", type=float, default=None,
+                    help="byte budget for online re-solves in MiB "
+                         "(default: the current plan's budget, or the "
+                         "f32 table footprint when serving unplanned)")
     from .plan_cli import add_plan_args
     add_plan_args(ap)
     args = ap.parse_args()

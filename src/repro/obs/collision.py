@@ -90,6 +90,18 @@ class CollisionTelemetry:
         if len(self._pending) >= self.compact_every:
             self._compact()
 
+    def reset(self) -> None:
+        """Drop all accumulated traffic.  The online drift detector judges
+        *windows*: the controller reads a window's measured masses, calls
+        ``reset()``, and the next check sees only fresh traffic — while the
+        long-horizon view lives in ``plan.freq.StreamingStats``, which the
+        controller feeds from each window before resetting."""
+        self._pending = []
+        self._ids = np.empty(0, np.int64)
+        self._counts = np.empty(0, np.int64)
+        self.waves = 0
+        self.requests = 0
+
     def _compact(self) -> None:
         if not self._pending:
             return

@@ -71,7 +71,7 @@ __all__ = ["module_partitions", "sharing", "proxy_loss", "proxy_quality",
            "partition_entropy", "partition_diagnostics",
            "complementary_flag", "COMPLEMENTARY_CHECK_MAX",
            "required_dim", "width_factor", "dim_proxy_loss",
-           "dim_proxy_quality", "fit_width_exponent",
+           "dim_proxy_quality", "fit_width_exponent", "fit_collision_scale",
            "DIM_ALPHA", "DIM_BETA", "BITS_PER_DIM"]
 
 # is_complementary is a brute-force O(size) scan; above this we trust the
@@ -197,6 +197,38 @@ def fit_width_exponent(samples: Sequence[tuple[float, float]]) -> float:
         den += lr * lr
     if den == 0.0:
         raise ValueError("need at least one sample with width_ratio < 1")
+    return num / den
+
+
+def fit_collision_scale(samples: Sequence[tuple[float, float]]) -> float:
+    """Calibrate the analytic collision proxy against measured masses.
+
+    ``samples`` are per-feature ``(predicted, measured)`` collision-mass
+    pairs — exactly the columns ``BENCH_obs.json`` pins (``predicted_
+    collision_mass`` from plan-time stats, ``measured_collision_mass``
+    from served traffic).  Returns the scale ``k`` minimizing
+    ``sum (measured - k * predicted)^2`` (through the origin: both
+    quantities vanish together on a collision-free table), i.e.
+    ``k = sum(p*m) / sum(p^2)``.  ``k == 1`` means the proxy is
+    calibrated; the drift detector multiplies its predicted baseline by
+    ``k`` so a systematic proxy bias is not mistaken for drift.
+
+    Pairs with ``predicted == 0`` carry no scale signal and are skipped —
+    a zero-predicted feature with nonzero measured mass is *drift*, not
+    miscalibration, and is the detector's job.  Raises when no pair has
+    ``predicted > 0`` (the width-axis twin ``fit_width_exponent`` follows
+    the same no-signal contract).
+    """
+    num = den = 0.0
+    for p, m in samples:
+        if p < 0.0 or m < 0.0:
+            raise ValueError(f"collision masses must be >= 0, got {(p, m)}")
+        if p == 0.0:
+            continue
+        num += p * m
+        den += p * p
+    if den == 0.0:
+        raise ValueError("need at least one sample with predicted mass > 0")
     return num / den
 
 

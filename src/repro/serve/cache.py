@@ -219,6 +219,17 @@ class HotRowCache:
         self.stats.bytes_cached += row.nbytes
         self._event("put", key)
 
+    def invalidate_all(self) -> int:
+        """Drop every resident row, counted as *invalidations* — the rows
+        are not being squeezed out by capacity pressure, they are stale
+        (``RecsysEngine.swap_plan`` installs a new plan whose combined
+        rows the old residency no longer matches).  Returns the number of
+        rows dropped; eviction counters are untouched."""
+        keys = list(self._rows)
+        for key in keys:
+            self._remove(key, kind="invalidate")
+        return len(keys)
+
     def get_many(self, keys: Iterable[Hashable]):
         """Batched get: ``(found: {key: row}, missing: [unique keys])``.
 
@@ -360,6 +371,19 @@ class DeviceHotRowCache(HotRowCache):
         rec = self._rows[key]
         self.flush()
         return np.asarray(self._slabs[rec.width][rec.slot])
+
+    def invalidate_all(self) -> int:
+        """Base-class semantics (every drop is an invalidation), plus the
+        storage teardown a plan swap needs: pending (unflushed) writes are
+        discarded and the slabs themselves are released — the new plan may
+        use different table widths, and a swap must not strand HBM in
+        slabs no width will ever touch again."""
+        n = super().invalidate_all()   # releases every slot, bumps version
+        self._slabs.clear()
+        self._free.clear()
+        self._pending.clear()
+        self.residency_version += 1    # force slot-map rebuild even if empty
+        return n
 
     # ---- slab management --------------------------------------------------
     def _max_rows(self, d: int) -> int:

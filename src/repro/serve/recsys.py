@@ -149,79 +149,14 @@ class RecsysEngine:
             from ..dist.sharding import INFERENCE_OVERRIDES, tree_shardings
             params = jax.device_put(
                 params, tree_shardings(params, mesh, INFERENCE_OVERRIDES))
-        self.params = params
-        dense_stage = _dense_stage_for(cfg)
-
-        def embed_fwd(params, idx, mask):
-            feats = embed_features(params["tables"], idx, cfg, mask=mask,
-                                   proj=params.get("proj"))
-            return jnp.stack(feats, axis=1)
-
-        # embed and dense stages jit separately: every path (cache off,
-        # host cache, device cache) funnels its (B, F, D) features through
-        # the *same* dense executable, so cache choice cannot perturb the
-        # dense math
-        self._embed_fwd = jax.jit(embed_fwd)
-        self._dense_fwd = jax.jit(
-            lambda params, dense, feats: dense_stage(params, dense, feats, cfg))
-
-        # device-slab forward: one program per (slot-shape, slab-shape)
-        # bucket — gather each feature's rows from its width's slab,
-        # mask-pool in f32 (bag_pool convention), project mixed-dim
-        # features into the interaction width
-        widths = tuple(sorted({mod.out_dim for mod in self.modules}))
-        w_index = {d: wi for wi, d in enumerate(widths)}
-        feat_width = tuple(mod.out_dim for mod in self.modules)
-        row_dtypes = tuple(_row_dtype(tp) for tp in params["tables"]) \
-            if isinstance(params, dict) else ()
-        self._widths = widths
-
-        def slab_fwd(proj, slabs, slots, mask):
-            feats = []
-            for i in range(len(feat_width)):
-                rows = jnp.take(slabs[w_index[feat_width[i]]],
-                                slots[:, i, :], axis=0)      # (B, L, d_i)
-                pooled = (rows * mask[:, i, :, None].astype(jnp.float32)
-                          ).sum(axis=1).astype(row_dtypes[i])
-                w = proj.get(str(i))
-                feats.append(pooled if w is None else pooled @ w)
-            return jnp.stack(feats, axis=1)
-
-        self._slab_fwd = jax.jit(slab_fwd)
-
-        # flat canonical-id layout for the device slot map: feature i's
-        # canonical rows occupy [offset_i, offset_i + space_i), so one
-        # int32 device array maps every cacheable row to its slab slot
-        # (-1 = not resident) and the hit path probes it in-graph
-        spaces = [mod.m if isinstance(mod, HashEmbedding) else size
-                  for mod, size in zip(self.modules, cfg.table_sizes)]
-        self._flat_offsets = np.concatenate(
-            [[0], np.cumsum(spaces)[:-1]]).astype(np.int64)
-        self._flat_total = int(sum(spaces))
-        self._slot_map = None
-        self._map_version = None
-
-        # canonicalization is part of the probe program: hash features
-        # fold mod m, QR/full ids are already < their space so the same
-        # modulus is a no-op for them (everything stays int32)
-        space_arr = jnp.asarray(spaces, jnp.int32)
-        off_arr = jnp.asarray(self._flat_offsets, jnp.int32)
-
-        def fast_fwd(smap, idx, mask, proj, slabs):
-            flat = idx % space_arr[None, :, None] + off_arr[None, :, None]
-            slots = jnp.take(smap, flat, axis=0)
-            nmiss = jnp.sum((slots < 0) & (mask > 0))
-            return slab_fwd(proj, slabs, slots, mask), nmiss
-
-        # probe + gather + pool + project in ONE program: the fast path
-        # costs the same number of dispatches as the in-graph embed
-        self._fast_fwd = jax.jit(fast_fwd)
+        self._install_model(cfg, params)
         self._sharded_embed = self._sharded_dense = self._sharded_fast = None
         if self._n_shards > 1:
             self._smap_mirror = self._slab_mirror = None
             self._mirror_version = None
-            self._build_sharded(dense_stage, space_arr, off_arr, w_index,
-                                feat_width, row_dtypes)
+            self._build_sharded(self._dense_stage, self._space_arr,
+                                self._off_arr, self._w_index,
+                                self._feat_width, self._row_dtypes)
         self._queue: deque[RecRequest] = deque()
         self._inflight: deque[tuple] = deque()
         self._next_uid = 0
@@ -256,6 +191,174 @@ class RecsysEngine:
                     collective="serve_exchange") \
                 if self._n_shards > 1 else None
             self._wire_by_bucket: dict[tuple[int, int], int] = {}
+
+    # ------------------------------------------------------------- model
+
+    def _install_model(self, cfg, params) -> None:
+        """Bind (cfg, params) and (re)build every program derived from
+        them: embed/dense jits, the slab forward, the flat canonical-id
+        layout, and the in-graph slot-map probe.  Called once from
+        ``__init__`` and again by ``swap_plan`` — everything that depends
+        on the plan's table structures lives here so a swap replaces it
+        atomically (between waves; in-flight waves closed over the old
+        programs and drain unaffected)."""
+        self.cfg = cfg
+        self.modules = tables_for(cfg)
+        self.params = params
+        dense_stage = _dense_stage_for(cfg)
+        self._dense_stage = dense_stage
+
+        def embed_fwd(params, idx, mask):
+            feats = embed_features(params["tables"], idx, cfg, mask=mask,
+                                   proj=params.get("proj"))
+            return jnp.stack(feats, axis=1)
+
+        # embed and dense stages jit separately: every path (cache off,
+        # host cache, device cache) funnels its (B, F, D) features through
+        # the *same* dense executable, so cache choice cannot perturb the
+        # dense math
+        self._embed_fwd = jax.jit(embed_fwd)
+        self._dense_fwd = jax.jit(
+            lambda params, dense, feats: dense_stage(params, dense, feats, cfg))
+
+        # device-slab forward: one program per (slot-shape, slab-shape)
+        # bucket — gather each feature's rows from its width's slab,
+        # mask-pool in f32 (bag_pool convention), project mixed-dim
+        # features into the interaction width
+        widths = tuple(sorted({mod.out_dim for mod in self.modules}))
+        w_index = {d: wi for wi, d in enumerate(widths)}
+        feat_width = tuple(mod.out_dim for mod in self.modules)
+        row_dtypes = tuple(_row_dtype(tp) for tp in params["tables"]) \
+            if isinstance(params, dict) else ()
+        self._widths = widths
+        self._w_index = w_index
+        self._feat_width = feat_width
+        self._row_dtypes = row_dtypes
+
+        def slab_fwd(proj, slabs, slots, mask):
+            feats = []
+            for i in range(len(feat_width)):
+                rows = jnp.take(slabs[w_index[feat_width[i]]],
+                                slots[:, i, :], axis=0)      # (B, L, d_i)
+                pooled = (rows * mask[:, i, :, None].astype(jnp.float32)
+                          ).sum(axis=1).astype(row_dtypes[i])
+                w = proj.get(str(i))
+                feats.append(pooled if w is None else pooled @ w)
+            return jnp.stack(feats, axis=1)
+
+        self._slab_fwd = jax.jit(slab_fwd)
+
+        # flat canonical-id layout for the device slot map: feature i's
+        # canonical rows occupy [offset_i, offset_i + space_i), so one
+        # int32 device array maps every cacheable row to its slab slot
+        # (-1 = not resident) and the hit path probes it in-graph
+        spaces = [mod.m if isinstance(mod, HashEmbedding) else size
+                  for mod, size in zip(self.modules, cfg.table_sizes)]
+        self._flat_offsets = np.concatenate(
+            [[0], np.cumsum(spaces)[:-1]]).astype(np.int64)
+        self._flat_total = int(sum(spaces))
+        self._slot_map = None
+        self._map_version = None
+
+        # canonicalization is part of the probe program: hash features
+        # fold mod m, QR/full ids are already < their space so the same
+        # modulus is a no-op for them (everything stays int32)
+        space_arr = jnp.asarray(spaces, jnp.int32)
+        off_arr = jnp.asarray(self._flat_offsets, jnp.int32)
+        self._space_arr = space_arr
+        self._off_arr = off_arr
+
+        def fast_fwd(smap, idx, mask, proj, slabs):
+            flat = idx % space_arr[None, :, None] + off_arr[None, :, None]
+            slots = jnp.take(smap, flat, axis=0)
+            nmiss = jnp.sum((slots < 0) & (mask > 0))
+            return slab_fwd(proj, slabs, slots, mask), nmiss
+
+        # probe + gather + pool + project in ONE program: the fast path
+        # costs the same number of dispatches as the in-graph embed
+        self._fast_fwd = jax.jit(fast_fwd)
+
+    def swap_plan(self, cfg, params, *, warm: bool = True) -> dict:
+        """Hot-swap to a new plan's (cfg, params) without downtime.
+
+        The zero-downtime contract, in dispatch order:
+
+        1. **drain** — in-flight waves hold references to the old params,
+           programs, and slabs, so they settle on the old plan (their
+           scores are exactly what the old plan would have served);
+        2. **invalidate** — every cached row is a *combined* row of the
+           old structure, so the whole residency is dropped as
+           invalidations (never evictions — capacity was not the cause;
+           the cache property tests pin this), device slabs are released
+           (widths may change), and ``residency_version`` moves so any
+           slot-map consumer rebuilds;
+        3. **install** — ``_install_model`` rebinds cfg/params and
+           rebuilds every derived program and the flat id layout;
+        4. **pre-warm** (``warm=True``) — every (batch, bag) bucket this
+           engine has served is compiled against the new plan *now*,
+           off the wave path, so post-swap p99 pays no XLA compiles.
+           Warm traffic touches the cache (admitting each feature's row
+           0) but never the obs telemetry — synthetic ids must not feed
+           the drift detector.
+
+        Single-host only (a sharded swap would need placement re-solve +
+        resharding — see ROADMAP); the queue, uid space, metrics history,
+        and completed map all survive the swap untouched.
+        """
+        if self._n_shards > 1:
+            raise NotImplementedError(
+                "swap_plan is single-host only: a sharded swap must also "
+                "re-solve placement and reshard the tables")
+        if cfg.embedding.kind == "feature":
+            raise NotImplementedError(
+                "feature-generation mode has no serving path (F varies)")
+        if tuple(cfg.table_sizes) != tuple(self.cfg.table_sizes):
+            raise ValueError("swap_plan keeps the feature set: table_sizes "
+                             "must match the running config")
+        while self._inflight:            # 1. drain on the old plan
+            self._reap()
+        dropped = 0
+        if self.cache is not None:       # 2. stale residency out
+            dropped = self.cache.invalidate_all()
+        self._install_model(cfg, params)  # 3. new programs in
+        if warm:                         # 4. compile before traffic lands
+            self._warm_buckets()
+        return {"invalidated_rows": dropped,
+                "buckets_warmed": sorted(self.buckets_seen) if warm else [],
+                "residency_version": getattr(self.cache,
+                                             "residency_version", None)}
+
+    def _warm_buckets(self) -> None:
+        """Run one dummy wave per previously-seen (batch, bag) bucket
+        through the same path selection as ``_dispatch`` — compiling the
+        new plan's fast-probe, miss-gather, slab, and dense programs for
+        every shape steady-state traffic will use.  Runs outside the
+        wave/metrics/obs bookkeeping: latency histograms and collision
+        telemetry never see these synthetic waves."""
+        f = len(self.modules)
+        dense_dim = getattr(self.cfg, "dense_dim", 13)
+        for bb, lb in sorted(self.buckets_seen):
+            dense = np.zeros((bb, dense_dim), np.float32)
+            idx = np.zeros((bb, f, lb), np.int32)
+            mask = np.zeros((bb, f, lb), np.float32)
+            mask[:, :, 0] = 1.0  # one live slot: exercises the miss path
+            if isinstance(self.cache, DeviceHotRowCache) \
+                    and not self.cache.record_events:
+                fast = self._embed_device_fast(idx, mask)
+                feats = None
+                if fast is not None:
+                    feats, nmiss = fast
+                    if int(nmiss):
+                        feats = self._embed_device(idx, mask)
+                if feats is None:
+                    feats = self._embed_device(idx, mask)
+            elif self.cache is not None:
+                feats = jnp.asarray(self._embed_cached(idx, mask))
+            else:
+                feats = self._embed_fwd(self.params, jnp.asarray(idx),
+                                        jnp.asarray(mask))
+            jax.block_until_ready(
+                self._dense_fwd(self.params, jnp.asarray(dense), feats))
 
     # ------------------------------------------------------------- sharding
 

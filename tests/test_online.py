@@ -1,0 +1,557 @@
+"""Online re-planning: streaming stats, drift detection, migration, swap.
+
+Four layers, mirroring ``src/repro/online``:
+
+* streaming frequency stats (``plan.freq.merge_stats`` / ``StreamingStats``)
+  and their crosscheck against ``obs.CollisionTelemetry``'s windowed view;
+* the ``DriftDetector`` state machine (hysteresis, cooldown, abstention);
+* migration invariants (Hypothesis properties: same-spec bitwise no-op,
+  head-id exactness of structure folding, byte-budget preservation,
+  per-leaf optimizer moment decisions);
+* ``RecsysEngine.swap_plan`` (drain → invalidate → install → warm) and the
+  ``ReplanController`` closed loop end to end.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.factory import EmbeddingSpec, make_embedding
+from repro.data.criteo import CriteoSpec, DriftSpec, batch_at, drifted_batch_at
+from repro.models.dlrm import DLRMConfig, dlrm_init, tables_for
+from repro.obs import Obs
+from repro.obs.collision import CollisionTelemetry, predicted_collision_mass
+from repro.online import (ReplanController, migrate_opt_state, migrate_params,
+                          representative_ids)
+from repro.online.drift import DriftDetector, DriftThresholds
+from repro.optim import optimizers as opt
+from repro.plan.freq import (FeatureStats, StreamingStats, merge_stats,
+                             stats_from_batches)
+from repro.plan.planner import build_plan, full_table_bytes
+from repro.plan.quality import fit_collision_scale, module_partitions
+from repro.serve.cache import DeviceHotRowCache, HotRowCache
+from repro.serve.quantize import quantize_params
+from repro.serve.recsys import RecsysEngine
+
+SIZES = (60, 40, 500)
+
+
+def _stats_of(ids, size):
+    uq, ct = np.unique(np.asarray(ids, np.int64), return_counts=True)
+    return FeatureStats(size=size, ids=uq,
+                        probs=(ct / ct.sum()).astype(np.float64))
+
+
+def _cfg(plan_or_spec=None, emb_dim=8):
+    return DLRMConfig(name="dlrm-criteo", table_sizes=SIZES, emb_dim=emb_dim,
+                      bottom_mlp=(8, 8), top_mlp=(8,), dense_dim=4,
+                      embedding=plan_or_spec)
+
+
+# --------------------------------------------------------- streaming stats
+
+
+def test_merge_stats_weighted_union():
+    a = _stats_of([0, 0, 1], 10)           # p = [2/3, 1/3]
+    b = _stats_of([1, 2], 10)              # p = [1/2, 1/2]
+    m = merge_stats(a, b, weight_a=3.0, weight_b=2.0)
+    assert m.size == 10
+    np.testing.assert_array_equal(m.ids, [0, 1, 2])
+    np.testing.assert_allclose(m.probs, [2 / 5, 2 / 5, 1 / 5])
+    assert abs(m.probs.sum() - 1.0) < 1e-12
+
+
+def test_merge_stats_empty_sides():
+    a = _stats_of([3, 3, 4], 10)
+    empty = FeatureStats(size=10, ids=np.empty(0, np.int64),
+                         probs=np.empty(0, np.float64))
+    m = merge_stats(a, empty, weight_a=1.0, weight_b=5.0)
+    np.testing.assert_array_equal(m.ids, a.ids)
+    np.testing.assert_allclose(m.probs, a.probs)
+    both = merge_stats(empty, empty)
+    assert both.ids.size == 0
+
+
+def test_streaming_no_decay_matches_batch_stats():
+    spec = CriteoSpec(table_sizes=SIZES, dense_dim=4, zipf=1.5, noise=0.5)
+    batches = [batch_at(0, t, 64, spec) for t in range(5)]
+    want = stats_from_batches(batches, SIZES)
+    stream = StreamingStats(SIZES, decay=1.0)
+    for b in batches:
+        stream.update(b)
+    for i in range(len(SIZES)):
+        got = stream.snapshot(i)
+        np.testing.assert_array_equal(got.ids, want[i].ids)
+        np.testing.assert_allclose(got.probs, want[i].probs, atol=1e-12)
+
+
+def test_streaming_decay_forgets_old_traffic():
+    stream = StreamingStats((100,), decay=0.1)
+    stream.update({"sparse": np.full((50, 1), 7, np.int64)})
+    stream.update({"sparse": np.full((50, 1), 9, np.int64)})
+    s = stream.snapshot(0)
+    p = dict(zip(s.ids.tolist(), s.probs.tolist()))
+    assert p[9] > 0.85          # fresh traffic dominates
+    assert 0 < p[7] < 0.15
+
+
+def test_streaming_max_support_prunes_lowest_mass():
+    stream = StreamingStats((100,), decay=1.0, max_support=3)
+    ids = np.array([[0] * 8 + [1] * 4 + [2] * 2 + [3] * 1 + [4] * 1]).T
+    stream.update({"sparse": ids})
+    s = stream.snapshot(0)
+    assert s.ids.size == 3
+    assert set(s.ids.tolist()) == {0, 1, 2}
+    assert abs(s.probs.sum() - 1.0) < 1e-12
+    assert stream.pruned[0] > 0
+
+
+def test_streaming_vs_telemetry_crosscheck():
+    """Satellite check: the decayless streaming view and the telemetry's
+    windowed view are the same estimator on the same id stream — support
+    and top-mass must agree exactly."""
+    spec = CriteoSpec(table_sizes=SIZES, dense_dim=4, zipf=1.5, noise=0.5)
+    tele = CollisionTelemetry(SIZES, compact_every=2)  # force compactions
+    stream = StreamingStats(SIZES, decay=1.0)
+    for t in range(6):
+        sparse = np.asarray(batch_at(0, t, 32, spec)["sparse"])
+        idx = sparse[:, :, None]
+        tele.record(idx, np.ones_like(idx, np.float32))
+        stream.update({"sparse": sparse})
+    for i in range(len(SIZES)):
+        a, b = tele.observed_stats(i), stream.snapshot(i)
+        assert a.support == b.support
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_allclose(a.probs, b.probs, atol=1e-12)
+        assert abs(a.top_mass - b.top_mass) < 1e-12
+
+
+def test_telemetry_reset_clears_window():
+    tele = CollisionTelemetry(SIZES)
+    idx = np.zeros((4, len(SIZES), 2), np.int64)
+    tele.record(idx, np.ones_like(idx, np.float32))
+    assert tele.waves == 1 and tele.observed_lookups(0) > 0
+    tele.reset()
+    assert tele.waves == 0
+    assert all(tele.observed_lookups(i) == 0 for i in range(len(SIZES)))
+    tele.record(idx, np.ones_like(idx, np.float32))
+    assert tele.waves == 1     # keeps accumulating after reset
+
+
+# -------------------------------------------------------- collision scale
+
+
+def test_fit_collision_scale_recovers_k():
+    assert abs(fit_collision_scale([(0.1, 0.2), (0.2, 0.4)]) - 2.0) < 1e-12
+    # least squares through the origin, not a mean of ratios
+    k = fit_collision_scale([(1.0, 1.1), (0.01, 0.05)])
+    assert abs(k - (1.0 * 1.1 + 0.01 * 0.05) / (1.0 + 0.0001)) < 1e-12
+
+
+def test_fit_collision_scale_rejects_bad_input():
+    with pytest.raises(ValueError):
+        fit_collision_scale([(0.0, 0.0)])       # no signal
+    with pytest.raises(ValueError):
+        fit_collision_scale([(-0.1, 0.2)])      # negative mass
+
+
+# --------------------------------------------------------- drift detector
+
+
+class _FakeTelemetry:
+    """Duck-typed telemetry: fixed lookups + measured masses per feature."""
+
+    def __init__(self, lookups, measured):
+        self._lookups, self._measured = lookups, measured
+
+    def observed_lookups(self, i):
+        return self._lookups[i]
+
+    def measured_collision_mass(self, module, i):
+        return self._measured[i]
+
+
+def test_detector_hysteresis_and_cooldown():
+    th = DriftThresholds(rel_gap=0.5, abs_gap=0.0, min_lookups=10,
+                         hysteresis=2, cooldown=2)
+    det = DriftDetector(modules=[None], predicted=[0.1], thresholds=th)
+    hot = _FakeTelemetry([100], [0.2])       # 2x predicted: over
+    cold = _FakeTelemetry([100], [0.1])
+    d1 = det.check(hot)
+    assert d1.over == (0,) and not d1.fired and d1.streak == 1
+    d2 = det.check(hot)                       # second consecutive: fires
+    assert d2.fired and det.fires == 1 and d2.cooldown == 2
+    d3 = det.check(hot)                       # cooldown blocks
+    assert not d3.fired and d3.cooldown == 1
+    d4 = det.check(cold)                      # quiet window resets streak
+    assert d4.streak == 0 and d4.cooldown == 0
+    det.check(hot)
+    assert det.check(hot).fired               # re-arms after cooldown drains
+
+
+def test_detector_abstains_below_min_lookups():
+    th = DriftThresholds(min_lookups=1000, hysteresis=1)
+    det = DriftDetector([None], [0.001], th)
+    d = det.check(_FakeTelemetry([10], [0.9]))
+    assert not d.fired and d.over == () and 0 not in d.gaps
+
+
+def test_detector_collision_scale_calibrates_threshold():
+    # measured 0.15 vs predicted 0.1: over at scale 1, calm at scale 1.5
+    tele = _FakeTelemetry([100], [0.151])
+    hot = DriftDetector([None], [0.1],
+                        DriftThresholds(rel_gap=0.4, abs_gap=0.0,
+                                        min_lookups=10, hysteresis=1))
+    calm = DriftDetector([None], [0.1],
+                         DriftThresholds(rel_gap=0.4, abs_gap=0.0,
+                                         min_lookups=10, hysteresis=1,
+                                         collision_scale=1.5))
+    assert hot.check(tele).fired
+    assert not calm.check(tele).fired
+
+
+def test_detector_rebase_sets_full_cooldown():
+    th = DriftThresholds(min_lookups=1, hysteresis=1, cooldown=3)
+    det = DriftDetector([None], [0.1], th)
+    det.rebase([None], [0.5])
+    assert det.predicted == [0.5]
+    d = det.check(_FakeTelemetry([100], [5.0]))
+    assert not d.fired and d.cooldown == 2    # cooldown absorbed the over
+
+
+# ------------------------------------------------------------- migration
+
+
+def _spec_strategy():
+    return st.one_of(
+        st.just(EmbeddingSpec(kind="full")),
+        st.builds(lambda c: EmbeddingSpec(kind="hash", num_collisions=c),
+                  st.sampled_from([2, 4, 8])),
+        st.builds(lambda c: EmbeddingSpec(kind="qr", num_collisions=c,
+                                          threshold=1),
+                  st.sampled_from([2, 4, 8])),
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(20, 120), _spec_strategy())
+def test_same_spec_migration_is_bitwise_noop(size, spec):
+    mod = make_embedding(size, 8, spec)
+    old = mod.init(jax.random.PRNGKey(0))
+    fresh = mod.init(jax.random.PRNGKey(1))
+    from repro.online.migrate import migrate_feature
+    out, _, dec = migrate_feature(mod, old, mod, fresh)
+    assert dec["decision"] == "copied"
+    for k in old:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(old[k]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(30, 200), st.sampled_from([2, 4, 8]), st.booleans())
+def test_fold_head_ids_are_exact(size, c, to_hash):
+    """Folding full→hash / full→QR reproduces the old embedding exactly at
+    every id below the new structure's head (all reps are the id itself)."""
+    old_mod = make_embedding(size, 8, EmbeddingSpec(kind="full"))
+    kind = "hash" if to_hash else "qr"
+    new_mod = make_embedding(size, 8, EmbeddingSpec(kind=kind,
+                                                    num_collisions=c,
+                                                    threshold=1))
+    old = old_mod.init(jax.random.PRNGKey(0))
+    fresh = new_mod.init(jax.random.PRNGKey(1))
+    from repro.online.migrate import migrate_feature
+    out, _, dec = migrate_feature(old_mod, old, new_mod, fresh)
+    assert dec["decision"] == "folded"
+    head = min(p.num_buckets for p in module_partitions(new_mod))
+    xs = np.arange(min(head, 32))
+    want = np.asarray(old_mod.apply(old, xs.astype(np.int32)))
+    got = np.asarray(new_mod.apply(out, xs.astype(np.int32)))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 6, 8]))
+def test_migrated_tree_matches_new_init_bytes(seed, frac):
+    """The migrated tree has exactly the fresh init's structure, shapes and
+    dtypes — so the solver's byte budget transfers to the migrated state."""
+    rng = np.random.default_rng(seed)
+    stats = [_stats_of(rng.integers(0, s, 400), s) for s in SIZES]
+    budget = full_table_bytes(SIZES, 8) // frac
+    plan_old = build_plan(stats, 8, full_table_bytes(SIZES, 8), arch="t")
+    plan_new = build_plan(stats, 8, budget, arch="t")
+    assert plan_new.total_bytes <= budget
+    old_cfg, new_cfg = _cfg(plan_old), _cfg(plan_new)
+    old = dlrm_init(jax.random.PRNGKey(0), old_cfg)
+    fresh = dlrm_init(jax.random.PRNGKey(1), new_cfg)
+    mig, report = migrate_params(old_cfg, old, new_cfg, fresh)
+    la, lb = jax.tree.leaves(mig), jax.tree.leaves(fresh)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert sum(report["counts"].values()) == len(SIZES)
+
+
+def test_migration_dequantizes_int8_source():
+    spec = EmbeddingSpec(kind="qr", num_collisions=4, threshold=1)
+    mod = make_embedding(100, 8, spec)
+    old = mod.init(jax.random.PRNGKey(0))
+    qold = quantize_params({"tables": [old]}, mode="int8")["tables"][0]
+    fresh = mod.init(jax.random.PRNGKey(1))
+    from repro.online.migrate import migrate_feature
+    out, _, dec = migrate_feature(mod, qold, mod, fresh)
+    assert dec["decision"] == "copied"
+    xs = np.arange(32, dtype=np.int32)
+    np.testing.assert_allclose(np.asarray(mod.apply(out, xs)),
+                               np.asarray(mod.apply(qold, xs)), atol=1e-6)
+
+
+def test_migrate_opt_state_carries_matching_leaves():
+    stats = [_stats_of(np.arange(s), s) for s in SIZES]
+    plan_old = build_plan(stats, 8, full_table_bytes(SIZES, 8), arch="t")
+    plan_new = build_plan(stats, 8, full_table_bytes(SIZES, 8) // 6,
+                          arch="t")
+    old_cfg, new_cfg = _cfg(plan_old), _cfg(plan_new)
+    old = dlrm_init(jax.random.PRNGKey(0), old_cfg)
+    fresh = dlrm_init(jax.random.PRNGKey(1), new_cfg)
+    mig, _ = migrate_params(old_cfg, old, new_cfg, fresh)
+    optimizer = opt.adagrad(1e-2)
+    state = optimizer.init(old)
+    # make the old moments distinguishable from a fresh init
+    state = [jax.tree.map(lambda x: x + 7.0, s) for s in state]
+    new_state, dec = migrate_opt_state(old, state, mig, optimizer)
+    assert len(new_state) == len(jax.tree.leaves(mig))
+    assert set(dec.values()) <= {"carried", "reset"}
+    assert "carried" in dec.values() and "reset" in dec.values()
+    from repro.optim.optimizers import leaf_paths
+    by_path = dict(zip(leaf_paths(mig), new_state))
+    for path, choice in dec.items():
+        if choice == "carried":
+            leaf0 = jax.tree.leaves(by_path[path])[0]
+            assert float(np.min(np.asarray(leaf0))) >= 7.0
+            break
+
+
+def test_migrate_params_rejects_changed_feature_set():
+    stats = [_stats_of(np.arange(s), s) for s in SIZES]
+    plan = build_plan(stats, 8, full_table_bytes(SIZES, 8), arch="t")
+    cfg = _cfg(plan)
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    other = dataclasses.replace(cfg, table_sizes=(60, 40, 400))
+    with pytest.raises(ValueError):
+        migrate_params(cfg, params, other, params)
+
+
+def test_representative_ids_cover_arithmetic_families():
+    from repro.core.partitions import (QuotientPartition, RemainderPartition,
+                                       qr_partitions)
+    r = RemainderPartition(size=50, num_buckets=7, m=7)
+    np.testing.assert_array_equal(representative_ids(r), np.arange(7))
+    q = QuotientPartition(size=50, num_buckets=8, m=7)
+    np.testing.assert_array_equal(representative_ids(q),
+                                  np.minimum(np.arange(8) * 7, 49))
+    for p in qr_partitions(500, 16):
+        reps = representative_ids(p)
+        np.testing.assert_array_equal(np.asarray(p.bucket(reps)),
+                                      np.arange(p.num_buckets))
+
+
+# ------------------------------------------------------- drift generator
+
+
+def test_drifted_batch_matches_batch_at_before_shift():
+    spec = CriteoSpec(table_sizes=SIZES, dense_dim=4, zipf=1.5, noise=0.5)
+    drift = DriftSpec(shift_step=10, zipf_after=0.7, rotate_frac=0.5)
+    for t in (0, 5, 9):
+        a, b = batch_at(3, t, 16, spec), drifted_batch_at(3, t, 16, spec,
+                                                          drift)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_drifted_batch_shifts_after_step_and_is_deterministic():
+    spec = CriteoSpec(table_sizes=SIZES, dense_dim=4, zipf=1.5, noise=0.5)
+    drift = DriftSpec(shift_step=10, zipf_after=0.7, rotate_frac=0.5)
+    a = drifted_batch_at(3, 20, 64, spec, drift)
+    b = drifted_batch_at(3, 20, 64, spec, drift)
+    np.testing.assert_array_equal(np.asarray(a["sparse"]),
+                                  np.asarray(b["sparse"]))
+    plain = batch_at(3, 20, 64, spec)
+    assert not np.array_equal(np.asarray(a["sparse"]),
+                              np.asarray(plain["sparse"]))
+    # labels re-planted on the drifted ids (same planted model)
+    assert a["label"].shape == plain["label"].shape
+
+
+def test_flash_crowd_concentrates_traffic():
+    spec = CriteoSpec(table_sizes=(1000,), dense_dim=4, zipf=1.5, noise=0.5)
+    drift = DriftSpec(crowd_step=0, crowd_len=100, crowd_frac=0.6)
+    batch = drifted_batch_at(0, 5, 512, spec, drift)
+    ids, counts = np.unique(np.asarray(batch["sparse"]), return_counts=True)
+    top = counts.max() / counts.sum()
+    assert top > 0.3            # crowd id dominates
+    after = drifted_batch_at(0, 200, 512, spec, drift)   # crowd over
+    plain = batch_at(0, 200, 512, spec)
+    np.testing.assert_array_equal(np.asarray(after["sparse"]),
+                                  np.asarray(plain["sparse"]))
+
+
+# ----------------------------------------------------------- plan hot-swap
+
+
+def _concentrated_stats(rng):
+    """Feature 2's plan-time traffic is near-point-mass, so the solver
+    starves its table — the drift-detectable configuration."""
+    out = []
+    for i, s in enumerate(SIZES):
+        ids = np.floor(rng.random(4000) ** 1.5 * s).astype(np.int64)
+        if i == 2:
+            ids[rng.random(4000) < 0.95] = 0
+        out.append(_stats_of(ids, s))
+    return out
+
+
+def _requests(rng, n, spread=False):
+    reqs = []
+    for _ in range(n):
+        bags = []
+        for i, s in enumerate(SIZES):
+            if spread and i == 2:
+                ids = (np.floor(rng.random(3) ** 0.7 * s).astype(int)
+                       + s // 2) % s
+            else:
+                ids = np.floor(rng.random(3) ** 1.5 * s).astype(int)
+                if i == 2:
+                    ids[rng.random(3) < 0.95] = 0
+            bags.append(list(ids))
+        reqs.append((rng.normal(size=4), bags))
+    return reqs
+
+
+def test_swap_plan_scores_match_fresh_engine():
+    rng = np.random.default_rng(0)
+    stats = _concentrated_stats(rng)
+    full = full_table_bytes(SIZES, 8)
+    cfg0 = _cfg(build_plan(stats, 8, full, arch="t"))
+    cfg1 = _cfg(build_plan(stats, 8, full // 6, arch="t"))
+    p0 = dlrm_init(jax.random.PRNGKey(0), cfg0)
+    p1f = dlrm_init(jax.random.PRNGKey(1), cfg1)
+    p1, _ = migrate_params(cfg0, p0, cfg1, p1f)
+    eng = RecsysEngine(cfg0, quantize_params(p0, mode="int8"), max_batch=4,
+                       cache=DeviceHotRowCache(capacity_rows=128),
+                       batching="waves")
+    reqs = _requests(rng, 8)
+    for d, b in reqs:
+        eng.submit(d, b)
+    eng.run_until_drained()
+    ver0 = eng.cache.residency_version
+    info = eng.swap_plan(cfg1, quantize_params(p1, mode="int8"), warm=False)
+    assert info["invalidated_rows"] >= 0
+    assert eng.cache.residency_version > ver0
+    uids = [eng.submit(d, b) for d, b in reqs]
+    done = eng.run_until_drained()
+    fresh = RecsysEngine(cfg1, quantize_params(p1, mode="int8"), max_batch=4,
+                         batching="waves")
+    fuids = [fresh.submit(d, b) for d, b in reqs]
+    fdone = fresh.run_until_drained()
+    for u, fu in zip(uids, fuids):
+        assert abs(done[u].score - fdone[fu].score) < 1e-4
+
+
+def test_swap_plan_drops_count_as_invalidations_not_evictions():
+    rng = np.random.default_rng(1)
+    stats = _concentrated_stats(rng)
+    full = full_table_bytes(SIZES, 8)
+    cfg0 = _cfg(build_plan(stats, 8, full, arch="t"))
+    cfg1 = _cfg(build_plan(stats, 8, full // 6, arch="t"))
+    p0 = dlrm_init(jax.random.PRNGKey(0), cfg0)
+    p1, _ = migrate_params(cfg0, p0, cfg1,
+                           dlrm_init(jax.random.PRNGKey(1), cfg1))
+    cache = HotRowCache(capacity_rows=10_000)   # never evicts on capacity
+    eng = RecsysEngine(cfg0, p0, max_batch=4, cache=cache, batching="waves")
+    for d, b in _requests(rng, 8):
+        eng.submit(d, b)
+    eng.run_until_drained()
+    rows_before = len(cache._rows)
+    assert rows_before > 0
+    info = eng.swap_plan(cfg1, p1, warm=False)
+    s = cache.stats
+    assert info["invalidated_rows"] == rows_before
+    assert s.invalidations >= rows_before
+    assert s.evictions == 0
+    assert len(cache._rows) == 0 and s.bytes_cached == 0
+
+
+def test_swap_plan_rejects_changed_feature_set():
+    stats = [_stats_of(np.arange(s), s) for s in SIZES]
+    cfg0 = _cfg(build_plan(stats, 8, full_table_bytes(SIZES, 8), arch="t"))
+    p0 = dlrm_init(jax.random.PRNGKey(0), cfg0)
+    eng = RecsysEngine(cfg0, p0, max_batch=4, batching="waves")
+    bad = dataclasses.replace(cfg0, table_sizes=(60, 40, 400))
+    with pytest.raises(ValueError):
+        eng.swap_plan(bad, p0)
+
+
+# -------------------------------------------------------- the closed loop
+
+
+def test_controller_closed_loop_fires_and_swaps():
+    rng = np.random.default_rng(2)
+    stats = _concentrated_stats(rng)
+    full = full_table_bytes(SIZES, 8)
+    plan0 = build_plan(stats, 8, full // 6, arch="t")
+    cfg0 = _cfg(plan0)
+    p0 = dlrm_init(jax.random.PRNGKey(0), cfg0)
+    eng = RecsysEngine(cfg0, quantize_params(p0, mode="int8"), max_batch=4,
+                       cache=DeviceHotRowCache(capacity_rows=128),
+                       batching="waves", obs=Obs(collisions=True))
+    ctrl = ReplanController(
+        eng, budget_bytes=full // 6,
+        thresholds=DriftThresholds(min_lookups=16, hysteresis=2, cooldown=1,
+                                   rel_gap=1.0),
+        quantize="int8", plan_stats=stats)
+    for _ in range(3):                       # stationary: quiet
+        for d, b in _requests(rng, 12):
+            eng.submit(d, b)
+        eng.run_until_drained()
+        decision = ctrl.check()
+        assert decision is not None and not decision.fired
+    assert not ctrl.replans
+    for _ in range(4):                       # drifted: fires within 4 windows
+        for d, b in _requests(rng, 12, spread=True):
+            eng.submit(d, b)
+        eng.run_until_drained()
+        ctrl.check()
+        if ctrl.replans:
+            break
+    assert len(ctrl.replans) == 1
+    rep = ctrl.replans[0]
+    assert rep["plan"]["total_bytes"] <= rep["plan"]["budget_bytes"]
+    assert 2 in rep["trigger"]["over"]       # the starved feature fired
+    assert eng.cfg.embedding is not plan0    # new plan is installed
+    assert rep["swap"]["residency_version"] == eng.cache.residency_version
+    # the detector rebased on the drifted streaming stats: continued
+    # drifted traffic settles instead of thrashing through more swaps
+    old_pred = predicted_collision_mass(tables_for(cfg0)[2], stats[2])
+    assert ctrl.detector.predicted[2] > old_pred   # baseline absorbed drift
+    for _ in range(3):
+        for d, b in _requests(rng, 12, spread=True):
+            eng.submit(d, b)
+        eng.run_until_drained()
+        ctrl.check()
+    assert len(ctrl.replans) == 1
+    # engine still serves after the swap
+    uid = eng.submit(*_requests(rng, 1, spread=True)[0])
+    done = eng.run_until_drained()
+    assert np.isfinite(done[uid].score)
+
+
+def test_controller_requires_collision_telemetry():
+    stats = [_stats_of(np.arange(s), s) for s in SIZES]
+    cfg = _cfg(build_plan(stats, 8, full_table_bytes(SIZES, 8), arch="t"))
+    p = dlrm_init(jax.random.PRNGKey(0), cfg)
+    eng = RecsysEngine(cfg, p, max_batch=4, batching="waves")
+    with pytest.raises(ValueError):
+        ReplanController(eng, budget_bytes=1 << 20)
