@@ -107,11 +107,14 @@ def bench(steps: int, policies: list[str], paths: list[str]) -> dict:
                 acct = accounting.fsdp_step_wire_bytes(
                     params, api.optimizer, mesh, pol,
                     scalar_allreduces=SCALAR_ALLREDUCES)
+            # one wrapper per lane: lower/compile and the timed run share
+            # the same jit cache, so _measure never recompiles the step
+            jitted = jax.jit(step)  # repro: noqa[JIT-001] step is a fresh closure per (path, policy) lane — one wrapper per lane is the minimum
             with mesh:
-                compiled = jax.jit(step).lower(state, batcher(0)).compile()
+                compiled = jitted.lower(state, batcher(0)).compile()
                 compile_s = time.monotonic() - t0
                 cost = analyze_hlo(compiled.as_text(), total_devices=n)
-                loss, us = _measure(jax.jit(step), state, batcher, steps)
+                loss, us = _measure(jitted, state, batcher, steps)
             rows.append({
                 "path": path, "policy": name, "devices": n,
                 "wire_bytes": acct["total_bytes"],

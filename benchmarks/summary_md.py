@@ -59,7 +59,7 @@ def _scalars(report: dict) -> list[tuple[str, object]]:
     found: dict[str, object] = {}
     levels = [("", report)] + [
         (f"{k}.", v) for k, v in report.items() if isinstance(v, dict)]
-    for prefix, d in levels:
+    for _prefix, d in levels:
         for k, v in d.items():
             if k in _HEADLINE and k not in found \
                     and isinstance(v, (int, float, bool)):
@@ -186,21 +186,75 @@ def section(path: str) -> list[str]:
     return lines
 
 
-def render(bench_dir: str) -> str:
-    lines = ["## Benchmark summary", ""]
-    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
-    if not paths:
-        lines.append(f"_no `BENCH_*.json` artifacts under `{bench_dir}`_")
-    for p in paths:
-        lines += section(p)
+def analysis_section(path: str) -> list[str]:
+    """Render a ``repro.analysis`` JSON report (the CI analysis lane's
+    ``--out`` artifact): overall verdict, per-pass roll-up, and the
+    inline waivers so suppressions stay reviewable."""
+    lines = ["## Static analysis", ""]
+    try:
+        with open(path) as f:
+            rep = json.load(f)
+    except Exception as e:
+        return lines + [f"could not parse `{path}`: `{e!r}`", ""]
+    counts = rep.get("counts", {})
+    verdict = ("**PASS** — no unsuppressed findings" if rep.get("ok")
+               else f"**FAIL** — {counts.get('unsuppressed', '?')} "
+                    "unsuppressed finding(s)")
+    lines += [verdict + f" ({counts.get('suppressed', 0)} suppressed)", "",
+              "| pass | layer | findings | seconds |", "|---|---|---|---|"]
+    for p in rep.get("passes", []):
+        lines.append(f"| {p.get('id')} ({p.get('name', '')}) | "
+                     f"L{p.get('layer')} | {p.get('findings', 0)} | "
+                     f"{p.get('seconds', 0)} |")
+    lines.append("")
+    findings = [f for f in rep.get("findings", []) if isinstance(f, dict)]
+    if findings:
+        lines += ["| rule | where | message | |", "|---|---|---|---|"]
+        for f in findings[:_MAX_ROWS]:
+            anchor = f.get("path", "")
+            if f.get("line"):
+                anchor += f":{f['line']}"
+            tag = "waived" if f.get("suppressed") else "**live**"
+            lines.append(f"| {f.get('rule')} | `{anchor}` | "
+                         f"{f.get('message', '')} | {tag} |")
+        lines.append("")
+    return lines
+
+
+def render(bench_dir: str, analysis: str | None = None,
+           bench: bool = True) -> str:
+    lines: list[str] = []
+    if analysis is not None:
+        lines += analysis_section(analysis)
+    if bench:
+        lines += ["## Benchmark summary", ""]
+        paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+        if not paths:
+            lines.append(f"_no `BENCH_*.json` artifacts under "
+                         f"`{bench_dir}`_")
+        for p in paths:
+            lines += section(p)
     return "\n".join(lines).rstrip() + "\n"
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/bench")
+    ap.add_argument("--analysis", default=None,
+                    help="also render this repro.analysis JSON report")
+    ap.add_argument("--no-bench", action="store_true",
+                    help="skip the BENCH_*.json sections (analysis-lane "
+                         "summaries)")
     args = ap.parse_args(argv)
-    sys.stdout.write(render(args.dir))
+    # default: pick up the analysis report when it exists next to the
+    # bench artifacts, so the bench lane's summary shows both
+    analysis = args.analysis
+    if analysis is None \
+            and os.path.exists(os.path.join("artifacts", "analysis",
+                                            "report.json")):
+        analysis = os.path.join("artifacts", "analysis", "report.json")
+    sys.stdout.write(render(args.dir, analysis=analysis,
+                            bench=not args.no_bench))
     return 0
 
 

@@ -1,0 +1,32 @@
+"""``repro.analysis`` — static invariant checker for the repo's
+hardest-won properties (see the module docstrings of each pass):
+
+* layer 1 — pure-AST lint passes (``ast_passes``), no jax needed;
+* layer 2 — trace-level auditors (``jaxpr_audit``, ``wire_audit``,
+  ``jit_audit``, ``injectivity``) that run programs to jaxpr/HLO,
+  never to hardware.
+
+Run ``python -m repro.analysis`` (see ``cli``) or call
+:func:`load_passes` + :func:`registry.PASSES` programmatically.
+"""
+
+from .findings import Finding, format_findings, report_dict  # noqa: F401
+from .registry import PASSES, Context, register_pass  # noqa: F401
+
+_LAYER1_MODULES = ("ast_passes",)
+_LAYER2_MODULES = ("jaxpr_audit", "wire_audit", "jit_audit", "injectivity")
+
+
+def load_passes(layer: str = "all") -> dict:
+    """Import the pass modules (side effect: registration) and return the
+    registry.  ``layer``: ``"1"`` (AST only — no jax import), ``"2"``,
+    or ``"all"``."""
+    import importlib
+    mods = ()
+    if layer in ("1", "all"):
+        mods += _LAYER1_MODULES
+    if layer in ("2", "all"):
+        mods += _LAYER2_MODULES
+    for m in mods:
+        importlib.import_module(f".{m}", __name__)
+    return PASSES

@@ -1,0 +1,16 @@
+"""``python -m repro.analysis`` — see ``cli``.
+
+The host-device count must be forced *before* jax initializes: the
+wire auditor compiles real collectives and refuses to run vacuously on
+a single device.  Respecting an explicit XLA_FLAGS lets CI (or a user)
+choose its own mesh size.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+from repro.analysis.cli import main  # noqa: E402
+
+main()

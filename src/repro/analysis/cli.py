@@ -1,0 +1,119 @@
+"""Command line for the static invariant checker.
+
+``python -m repro.analysis`` runs every registered pass over the repo
+and exits 1 if any *unsuppressed* finding remains — the CI analysis
+lane is exactly that call with ``--format github``.
+
+Selection::
+
+    python -m repro.analysis --layer 1              # AST only, no jax
+    python -m repro.analysis --select ACC-001,WIRE-001
+    python -m repro.analysis --skip INJ-001
+    python -m repro.analysis --paths src/repro/kernels
+    python -m repro.analysis --plan artifacts/plans/custom.json
+    python -m repro.analysis --list                 # show the registry
+
+``--out report.json`` writes the full JSON report (all findings
+including suppressed ones, per-pass telemetry) regardless of the
+display format — CI uploads it as an artifact and
+``benchmarks.summary_md`` renders it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from . import load_passes
+from .findings import (FORMATS, Finding, apply_suppressions,
+                       format_findings, report_dict)
+from .registry import Context
+
+__all__ = ["run", "main"]
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant checker (AST lint + jaxpr/HLO "
+                    "auditors); exits 1 on unsuppressed findings")
+    p.add_argument("--root", default=".", help="repo root to scan")
+    p.add_argument("--format", dest="fmt", default="human",
+                   choices=FORMATS)
+    p.add_argument("--out", default=None,
+                   help="also write the full JSON report here")
+    p.add_argument("--layer", default="all", choices=("1", "2", "all"),
+                   help="1 = AST passes only (no jax import), 2 = "
+                        "trace-level auditors only")
+    p.add_argument("--select", default=None,
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--skip", default=None,
+                   help="comma-separated rule ids to skip")
+    p.add_argument("--paths", nargs="*", default=None,
+                   help="scan these files/dirs instead of "
+                        "src/benchmarks/tests (AST passes)")
+    p.add_argument("--plan", action="append", default=[],
+                   help="extra MemoryPlan JSON for the injectivity "
+                        "certifier (repeatable)")
+    p.add_argument("--list", action="store_true",
+                   help="list registered passes and exit")
+    return p
+
+
+def _ids(csv: str | None) -> set[str] | None:
+    if csv is None:
+        return None
+    return {s.strip().upper() for s in csv.split(",") if s.strip()}
+
+
+def run(argv: list[str] | None = None) -> int:
+    args = _parser().parse_args(argv)
+    passes = load_passes(args.layer)
+    if args.list:
+        for info in sorted(passes.values(), key=lambda i: (i.layer, i.id)):
+            print(f"{info.id:10s} L{info.layer} {info.name:24s} "
+                  f"{info.description}")
+        return 0
+    select, skip = _ids(args.select), _ids(args.skip)
+    ctx = Context(root=args.root, paths=args.paths,
+                  plan_paths=args.plan)
+    findings: list[Finding] = []
+    pass_rows: list[dict] = []
+    for info in sorted(passes.values(), key=lambda i: (i.layer, i.id)):
+        if select is not None and info.id.upper() not in select:
+            continue
+        if skip is not None and info.id.upper() in skip:
+            continue
+        t0 = time.monotonic()
+        try:
+            found = list(info.fn(ctx))
+        except Exception as e:
+            # a crashed pass is a failed run, not a silent skip
+            found = [Finding(rule=info.id, layer=info.layer,
+                             path=f"analysis://pass/{info.id}", line=0,
+                             message=f"pass crashed: {e!r}")]
+        findings += found
+        pass_rows.append({
+            "id": info.id, "name": info.name, "layer": info.layer,
+            "description": info.description,
+            "seconds": round(time.monotonic() - t0, 3),
+            "findings": len(found),
+            "notes": ctx.notes.get(info.id),
+        })
+    findings = apply_suppressions(findings, ctx.sources())
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    print(format_findings(findings, args.fmt, passes=pass_rows,
+                          root=args.root))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report_dict(findings, pass_rows, args.root), f,
+                      indent=2)
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+def main() -> None:
+    sys.exit(run())

@@ -1,0 +1,102 @@
+"""Layer-2 jaxpr walker: every ``dot_general``/``reduce_sum`` reachable
+from the registered kernel programs must accumulate in f32 (or wider).
+
+This makes the PR 2 f32-accumulation audit permanent: each program in
+``programs.kernel_programs`` traces to a jaxpr (``pallas_call`` bodies
+and control-flow branches included, recursively) and every floating-
+point contraction/reduction equation must produce an f32+ output.  A
+bf16 ``reduce_sum`` — the L-adds-each-round bug the embedding-bag audit
+originally caught at L=16, D=128 — fails here without ever touching
+hardware.
+
+Integer reductions (mask counts, index arithmetic) are exempt; so is
+anything already f32/f64 on the way in.
+"""
+
+from __future__ import annotations
+
+from .findings import Finding
+from .registry import Context, register_pass
+from .programs import kernel_programs
+
+__all__ = ["iter_equations", "audit_program"]
+
+_AUDITED_PRIMITIVES = ("dot_general", "reduce_sum")
+
+
+def _subjaxprs(params: dict):
+    """Jaxpr-valued params of an equation — pallas_call's ``jaxpr``,
+    cond branches, scan/while bodies — discovered structurally so new
+    higher-order primitives are covered without a registry."""
+    import jax.core as jcore
+    closed = getattr(jcore, "ClosedJaxpr", ())
+    plain = getattr(jcore, "Jaxpr", ())
+    for v in params.values():
+        for item in (v if isinstance(v, (list, tuple)) else (v,)):
+            if isinstance(item, closed):
+                yield item.jaxpr
+            elif isinstance(item, plain):
+                yield item
+
+
+def iter_equations(jaxpr):
+    """Depth-first over every equation, recursing into sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _subjaxprs(eqn.params):
+            yield from iter_equations(sub)
+
+
+def _is_float(aval) -> bool:
+    # jnp.issubdtype, not np: bfloat16 is an ml_dtypes extension that
+    # numpy's hierarchy does not classify as floating
+    import jax.numpy as jnp
+    dtype = getattr(aval, "dtype", None)
+    return dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+
+
+def _is_narrow(aval) -> bool:
+    import numpy as np
+    return _is_float(aval) and np.dtype(aval.dtype).itemsize < 4
+
+
+def audit_program(fn, args, name: str) -> list[Finding]:
+    """Trace ``fn(*args)`` and flag narrow-accumulating equations."""
+    import jax
+    findings = []
+    try:
+        closed = jax.make_jaxpr(fn)(*args)
+    except Exception as e:
+        return [Finding(rule="ACC-002", path=f"analysis://jaxpr/{name}",
+                        line=0, layer=2,
+                        message=f"program failed to trace: {e!r}")]
+    for eqn in iter_equations(closed.jaxpr):
+        prim = eqn.primitive.name
+        if prim not in _AUDITED_PRIMITIVES:
+            continue
+        if not any(_is_float(v.aval) for v in eqn.invars
+                   if hasattr(v, "aval")):
+            continue   # integer/bool reduction: not an accumulation hazard
+        narrow = [v for v in eqn.outvars if _is_narrow(v.aval)]
+        if narrow:
+            dtypes = ", ".join(str(v.aval.dtype) for v in narrow)
+            findings.append(Finding(
+                rule="ACC-002", path=f"analysis://jaxpr/{name}", line=0,
+                layer=2,
+                message=f"{prim} accumulates in {dtypes} (< f32) — "
+                        "upcast operands or set preferred_element_type"))
+    return findings
+
+
+@register_pass("ACC-002", "jaxpr-f32-accumulation", 2,
+               "traced dot_general/reduce_sum from kernel programs "
+               "must accumulate in f32")
+def jaxpr_pass(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    audited = []
+    for prog in kernel_programs():
+        fn, args = prog.build()
+        findings += audit_program(fn, args, prog.name)
+        audited.append(prog.name)
+    ctx.notes["ACC-002"] = {"programs_audited": audited}
+    return findings

@@ -1,0 +1,110 @@
+"""Layer-2 jit-cache watcher: replay a canonical request stream through
+``RecsysEngine`` and fail if compile counts exceed the pow2-bucket bound.
+
+The engine's whole latency story rests on one invariant: every wave pads
+to a (pow2 batch, pow2 bag) bucket, so the number of distinct compiled
+programs is O(log max_batch · log max_bag) — bounded, and zero once the
+bucket grid is warm.  A padding regression that leaks one unbucketed
+shape into the hot path silently turns p99 into a compile storm; this
+pass catches it as arithmetic:
+
+* after draining a deterministic stream spanning the bucket grid, the
+  embed program may have compiled at most once per (batch, bag) bucket
+  seen, and the dense program at most once per batch bucket;
+* replaying the *same* stream must add **zero** new compiles.
+
+Uses :meth:`RecsysEngine.compile_count` (cache introspection, no
+timing); if the installed jax cannot report cache sizes the pass emits a
+loud finding rather than passing vacuously.  Everything runs on one CPU
+device with a tiny model — ~seconds, no hardware claims.
+"""
+
+from __future__ import annotations
+
+from .findings import Finding
+from .registry import Context, register_pass
+
+__all__ = ["replay_and_audit"]
+
+_RULE = "JIT-002"
+_ANCHOR = "analysis://jit/recsys-replay"
+
+
+def _canonical_stream(sizes, n_requests: int = 40, max_bag: int = 8):
+    """Deterministic request stream spanning bag buckets {1, 2, 4, 8}."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    reqs = []
+    for _ in range(n_requests):
+        bag_len = int(rng.integers(1, max_bag + 1))
+        reqs.append((rng.normal(size=13),
+                     [list(rng.integers(0, s, size=bag_len)) for s in sizes]))
+    return reqs
+
+
+def _build_engine():
+    import jax
+    from ..core.factory import EmbeddingSpec
+    from ..models.dlrm import DLRMConfig, dlrm_init
+    from ..serve.quantize import quantize_params
+    from ..serve.recsys import RecsysEngine
+    cfg = DLRMConfig(table_sizes=(100, 500, 33), emb_dim=16,
+                     bottom_mlp=(32, 16), top_mlp=(32,),
+                     embedding=EmbeddingSpec(kind="qr", num_collisions=4,
+                                             threshold=40))
+    params = quantize_params(dlrm_init(jax.random.PRNGKey(0), cfg))
+    return RecsysEngine(cfg, params, max_batch=8)
+
+
+def replay_and_audit(engine=None) -> tuple[list[Finding], dict]:
+    """Drain the canonical stream twice; return (findings, telemetry)."""
+    findings: list[Finding] = []
+    if engine is None:
+        engine = _build_engine()
+    reqs = _canonical_stream(engine.cfg.table_sizes)
+    for dense, bags in reqs:
+        engine.submit(dense, bags)
+    engine.run_until_drained()
+    counts = engine.compile_count()
+    per = counts["per_program"]
+    if all(v is None for v in per.values()):
+        return ([Finding(rule=_RULE, path=_ANCHOR, line=0, layer=2,
+                         message="jit cache sizes unavailable on this jax "
+                                 "version — the compile-count bound cannot "
+                                 "be checked; refusing to pass vacuously")],
+                {"counts": counts})
+    buckets = engine.buckets_seen
+    batch_buckets = {bb for bb, _ in buckets}
+    bounds = {"embed": len(buckets), "dense": len(batch_buckets)}
+    for prog, bound in bounds.items():
+        got = per.get(prog)
+        if got is not None and got > bound:
+            findings.append(Finding(
+                rule=_RULE, path=_ANCHOR, line=0, layer=2,
+                message=f"{prog} program compiled {got}x for "
+                        f"{bound} pow2 bucket(s) {sorted(buckets)} — "
+                        "a shape escaped the bucket grid"))
+    # steady state: the identical stream must not compile anything new
+    for dense, bags in reqs:
+        engine.submit(dense, bags)
+    engine.run_until_drained()
+    after = engine.compile_count()
+    if after["total"] != counts["total"]:
+        findings.append(Finding(
+            rule=_RULE, path=_ANCHOR, line=0, layer=2,
+            message=f"replaying the identical stream added "
+                    f"{after['total'] - counts['total']} compile(s) — the "
+                    "warm path is not shape-stable"))
+    telemetry = {"first_pass": counts, "replay": after,
+                 "buckets_seen": sorted(buckets), "bounds": bounds,
+                 "requests": len(reqs) * 2}
+    return findings, telemetry
+
+
+@register_pass(_RULE, "jit-cache-bound", 2,
+               "RecsysEngine compile count stays within the pow2-bucket "
+               "bound over a canonical replay")
+def jit_cache_pass(ctx: Context) -> list[Finding]:
+    findings, telemetry = replay_and_audit()
+    ctx.notes[_RULE] = telemetry
+    return findings

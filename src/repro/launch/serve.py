@@ -159,7 +159,7 @@ def _serve_rec(mod, args):
     done = {}
     interval = args.replan_interval or args.requests
     for start in range(0, args.requests, interval):
-        for i in range(start, min(start + interval, args.requests)):
+        for _ in range(start, min(start + interval, args.requests)):
             dense = rng.normal(size=cfg.dense_dim)
             bags = []
             for s in sizes:

@@ -69,6 +69,12 @@ class CollisionTelemetry:
         self._pending: list[np.ndarray] = []   # 1-D packed live ids
         self._ids = np.empty(0, np.int64)      # packed, sorted unique
         self._counts = np.empty(0, np.int64)
+        # support-novelty counter: fraction of served lookups whose raw id
+        # was NOT in the baseline support the plan was solved from — ids
+        # the planner never scored, the leading edge of traffic drift
+        self._baseline: Optional[np.ndarray] = None   # packed, sorted
+        self._lookups = np.zeros(len(self.table_sizes), np.int64)
+        self._unseen = np.zeros(len(self.table_sizes), np.int64)
         self.waves = 0
         self.requests = 0
 
@@ -85,6 +91,16 @@ class CollisionTelemetry:
         packed = (np.asarray(idx).astype(np.int64)
                   + self._offsets[None, :, None])[np.asarray(mask) > 0]
         self._pending.append(packed)
+        feat = packed >> self._SHIFT
+        self._lookups += np.bincount(feat, minlength=len(self.table_sizes))
+        if self._baseline is not None and packed.size:
+            pos = np.searchsorted(self._baseline, packed)
+            pos_c = np.minimum(pos, max(self._baseline.size - 1, 0))
+            seen = ((pos < self._baseline.size)
+                    & (self._baseline.size > 0)
+                    & (self._baseline[pos_c] == packed))
+            self._unseen += np.bincount(feat[~seen],
+                                        minlength=len(self.table_sizes))
         self.waves += 1
         self.requests += int(idx.shape[0])
         if len(self._pending) >= self.compact_every:
@@ -99,8 +115,39 @@ class CollisionTelemetry:
         self._pending = []
         self._ids = np.empty(0, np.int64)
         self._counts = np.empty(0, np.int64)
+        # the baseline is a plan-time reference, not traffic — it survives
+        # the window reset; only the per-window counters restart
+        self._lookups = np.zeros(len(self.table_sizes), np.int64)
+        self._unseen = np.zeros(len(self.table_sizes), np.int64)
         self.waves = 0
         self.requests = 0
+
+    def set_baseline(self, per_feature) -> None:
+        """Install the baseline support for the novelty counter.
+
+        ``per_feature`` is one entry per categorical feature: either a
+        ``plan.freq.FeatureStats`` (its ``ids`` field is used — pass the
+        exact stats the live plan was solved from) or a bare id array.
+        Subsequent waves count, per feature, lookups whose id is outside
+        this support; ``report()`` surfaces the rate."""
+        if len(per_feature) != len(self.table_sizes):
+            raise ValueError(f"baseline has {len(per_feature)} features, "
+                             f"telemetry tracks {len(self.table_sizes)}")
+        packed = [np.asarray(getattr(f, "ids", f), np.int64)
+                  + (np.int64(i) << self._SHIFT)
+                  for i, f in enumerate(per_feature)]
+        self._baseline = np.unique(np.concatenate(packed)) if packed \
+            else np.empty(0, np.int64)
+        self._lookups = np.zeros(len(self.table_sizes), np.int64)
+        self._unseen = np.zeros(len(self.table_sizes), np.int64)
+
+    def unseen_id_rate(self, feature: int) -> Optional[float]:
+        """Fraction of this feature's served lookups outside the baseline
+        support (``None`` until ``set_baseline`` is called)."""
+        if self._baseline is None:
+            return None
+        n = int(self._lookups[feature])
+        return float(self._unseen[feature] / n) if n else 0.0
 
     def _compact(self) -> None:
         if not self._pending:
@@ -168,6 +215,7 @@ class CollisionTelemetry:
                 "size": self.table_sizes[i],
                 "observed_lookups": self.observed_lookups(i),
                 "observed_support": self.observed_support(i),
+                "unseen_id_rate": self.unseen_id_rate(i),
                 "measured_collision_mass":
                     self.measured_collision_mass(mod, i),
             }

@@ -985,6 +985,33 @@ class RecsysEngine:
         if self._obs is not None:
             self._obs.registry.reset(prefix="serve_")
 
+    def compile_count(self) -> dict:
+        """Per-program jit compile counts — the pow2-bucket bound made
+        introspectable.  Reads each wrapper's compile cache (no timing, no
+        dispatch): the analyzer's jit-cache watcher and the regression
+        test both gate on these numbers, so a padding bug that sneaks an
+        unbucketed shape into the hot path shows up as an excess compile,
+        not as a latency mystery.  ``swap_plan`` rebuilds the wrappers, so
+        counts restart from zero at install (matching what the engine can
+        recompile after a swap).  Returns ``{"per_program": {...},
+        "total": n}``; wrappers whose cache the jax version cannot report
+        are listed as ``None`` and excluded from the total."""
+        wrappers = {"embed": self._embed_fwd, "dense": self._dense_fwd,
+                    "slab": self._slab_fwd, "fast": self._fast_fwd,
+                    "sharded_embed": self._sharded_embed,
+                    "sharded_dense": self._sharded_dense,
+                    "sharded_fast": self._sharded_fast}
+        per: dict[str, Optional[int]] = {}
+        total = 0
+        for name, fn in wrappers.items():
+            if fn is None:
+                continue
+            size = getattr(fn, "_cache_size", None)
+            per[name] = int(size()) if callable(size) else None
+            if per[name] is not None:
+                total += per[name]
+        return {"per_program": per, "total": total}
+
     def metrics(self) -> dict:
         lat = np.asarray(self.wave_latencies_s or [0.0])
         wall = ((self._t_last - self._t_first)

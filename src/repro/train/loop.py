@@ -268,7 +268,7 @@ def make_fsdp_train_step(loss_fn, optimizer: Optimizer, mesh, params_like, *,
         flat_e = jax.tree.leaves(state["err"])
 
         red, new_err, p_local = [], [], []
-        for g, p, e_blk, (path, shape, mode, dim) in zip(flat_g, flat_p,
+        for g, p, e_blk, (_path, shape, mode, dim) in zip(flat_g, flat_p,
                                                          flat_e, plan):
             e = e_blk.reshape(e_blk.shape[1:])  # drop the device dim
             if dim is None:
@@ -302,7 +302,7 @@ def make_fsdp_train_step(loss_fn, optimizer: Optimizer, mesh, params_like, *,
         new_p_local, new_opt = optimizer.update(g_tree, state["opt"], p_tree,
                                                 state["step"])
         new_params = []
-        for np_loc, (path, shape, mode, dim) in zip(
+        for np_loc, (_path, shape, _mode, dim) in zip(
                 jax.tree.leaves(new_p_local), plan):
             if dim is None:
                 new_params.append(np_loc)

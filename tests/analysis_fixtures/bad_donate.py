@@ -1,0 +1,11 @@
+"""Seeded DON-001 violation: reading a buffer after passing it at a
+donated position — XLA may already have reused its memory."""
+
+import jax
+
+
+def train_step(params, grads):
+    update = jax.jit(lambda p, g: p, donate_argnums=(0,))
+    new_params = update(params, grads)
+    stale = params                                     # DON-001
+    return new_params, stale

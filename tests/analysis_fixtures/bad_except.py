@@ -1,0 +1,10 @@
+"""Seeded EXC-001 violation: a bare except swallowing everything,
+KeyboardInterrupt and worker faults included."""
+
+
+def load_plan(path):
+    try:
+        with open(path) as f:
+            return f.read()
+    except:                                            # EXC-001  # noqa: E722
+        return None

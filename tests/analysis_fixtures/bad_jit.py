@@ -1,0 +1,16 @@
+"""Seeded JIT-001 violations: a wrapper built per loop iteration and a
+jit-then-call in a single expression — both discard the compile cache."""
+
+import jax
+
+
+def per_iteration(fns, x):
+    outs = []
+    for fn in fns:
+        jitted = jax.jit(fn)                           # JIT-001: in loop
+        outs.append(jitted(x))
+    return outs
+
+
+def per_call(fn, x):
+    return jax.jit(fn)(x)                              # JIT-001: immediate

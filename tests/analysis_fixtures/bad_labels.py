@@ -1,0 +1,7 @@
+"""Seeded OBS-001 violation: an interpolated metric label — every new
+value mints a fresh time series (unbounded cardinality)."""
+
+
+def observe_wave(counter, feature_id, latency_us):
+    counter.labels(feature=f"feat_{feature_id}").inc()   # OBS-001
+    counter.labels(feature="all").observe(latency_us)

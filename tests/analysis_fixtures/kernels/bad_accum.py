@@ -1,0 +1,16 @@
+"""Seeded ACC-001 violation: a kernel body that reduces ref-derived data
+with no f32 upcast anywhere in the expression's dataflow."""
+
+import jax.numpy as jnp
+
+
+def pool_kernel(x_ref, mask_ref, o_ref):
+    x = x_ref[...]
+    w = mask_ref[...]
+    o_ref[...] = (x * w[:, :, None]).sum(axis=1)       # ACC-001 here
+
+
+def pool_kernel_ok(x_ref, mask_ref, o_ref):
+    x = x_ref[...]
+    w = mask_ref[...]
+    o_ref[...] = (x * w[:, :, None]).astype(jnp.float32).sum(axis=1)

@@ -1,0 +1,9 @@
+"""Seeded DET-001 violation: wall-clock read in a kernel file — under
+trace it freezes into a compile-time constant."""
+
+import time
+
+
+def stamp_rows(rows):
+    t0 = time.monotonic()                              # DET-001
+    return rows, t0

@@ -1,0 +1,8 @@
+"""Suppression round-trip fixture: the same JIT-001 shape as ``bad_jit``
+but waived inline — the analyzer must report it as suppressed, not live."""
+
+import jax
+
+
+def per_call(fn, x):
+    return jax.jit(fn)(x)   # repro: noqa[JIT-001] fixture: waiver round-trip

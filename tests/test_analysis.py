@@ -1,0 +1,296 @@
+"""The static analyzer: seeded-violation fixtures each trip their rule,
+the committed tree is clean, suppressions round-trip, the injectivity
+certifier is exact on every structural family (brute-force crosschecked),
+and the compile-count introspection is replay-stable."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join("tests", "analysis_fixtures")
+
+
+def _run_cli(argv):
+    from repro.analysis.cli import run
+    return run(argv)
+
+
+def _layer1_findings(paths):
+    from repro.analysis import load_passes
+    from repro.analysis.findings import apply_suppressions
+    from repro.analysis.registry import Context
+    passes = load_passes("1")
+    ctx = Context(root=REPO, paths=paths)
+    findings = []
+    for info in passes.values():
+        if info.layer == 1:
+            findings += info.fn(ctx)
+    return apply_suppressions(findings, ctx.sources())
+
+
+# ------------------------------------------------------- seeded fixtures
+
+@pytest.mark.parametrize("fixture,rule,line", [
+    ("kernels/bad_accum.py", "ACC-001", 10),
+    ("bad_jit.py", "JIT-001", 10),
+    ("bad_jit.py", "JIT-001", 16),
+    ("bad_labels.py", "OBS-001", 6),
+    ("bad_except.py", "EXC-001", 9),
+    ("kernels/bad_clock.py", "DET-001", 8),
+    ("bad_donate.py", "DON-001", 10),
+])
+def test_fixture_trips_rule(fixture, rule, line):
+    found = _layer1_findings([os.path.join(FIXTURES, fixture)])
+    live = [f for f in found if not f.suppressed]
+    assert any(f.rule == rule and f.line == line for f in live), live
+
+
+def test_fixture_dir_trips_every_rule_family():
+    found = _layer1_findings([FIXTURES])
+    rules = {f.rule for f in found if not f.suppressed}
+    assert {"ACC-001", "JIT-001", "OBS-001", "DET-001",
+            "EXC-001", "DON-001"} <= rules
+
+
+def test_clean_tree_layer1_no_live_findings():
+    found = _layer1_findings(None)   # default src/benchmarks/tests walk
+    live = [f for f in found if not f.suppressed]
+    assert live == [], live
+
+
+# ----------------------------------------------------------- suppression
+
+def test_noqa_roundtrip():
+    found = _layer1_findings([os.path.join(FIXTURES, "noqa_ok.py")])
+    assert len(found) == 1 and found[0].suppressed
+    assert found[0].rule == "JIT-001"
+
+
+def test_suppression_parsing():
+    from repro.analysis.findings import suppressions_for
+    text = ("x = 1\n"
+            "y = f()   # repro: noqa[ACC-001, JIT-001] why\n"
+            "z = g()   # repro: noqa\n")
+    sup = suppressions_for(text)
+    assert sup[2] == frozenset({"ACC-001", "JIT-001"})
+    assert sup[3] is None and 1 not in sup
+
+
+def test_formats_and_exit_codes(tmp_path):
+    from repro.analysis.findings import Finding, format_findings
+    fs = [Finding(rule="ACC-001", path="a.py", line=3, message="m"),
+          Finding(rule="JIT-001", path="b.py", line=7, message="n",
+                  suppressed=True)]
+    human = format_findings(fs, "human")
+    assert "a.py:3" in human and "[suppressed]" in human
+    gh = format_findings(fs, "github")
+    assert "::error file=a.py,line=3,title=ACC-001::" in gh
+    assert "::notice file=b.py" in gh
+    rep = json.loads(format_findings(fs, "json", root=REPO))
+    assert rep["counts"] == {"total": 2, "unsuppressed": 1, "suppressed": 1}
+    out = tmp_path / "r.json"
+    rc = _run_cli(["--layer", "1", "--root", REPO, "--paths",
+                   os.path.join(FIXTURES, "bad_except.py"),
+                   "--out", str(out)])
+    assert rc == 1
+    assert json.loads(out.read_text())["ok"] is False
+
+
+def test_cli_list_and_select():
+    rc = _run_cli(["--list"])
+    assert rc == 0
+    # selecting a rule the fixture does not violate -> clean exit
+    rc = _run_cli(["--layer", "1", "--root", REPO, "--select", "EXC-001",
+                   "--paths", os.path.join(FIXTURES, "bad_jit.py")])
+    assert rc == 0
+
+
+# ------------------------------------------------- injectivity certifier
+
+def test_certifier_structural_families_exact():
+    from repro.analysis.injectivity import certify_partitions
+    from repro.core.partitions import (crt_partitions,
+                                       generalized_qr_partitions,
+                                       naive_partition, qr_partitions)
+    for parts, size in [
+        (naive_partition(97), 97),
+        (qr_partitions(1000, 32), 1000),
+        (generalized_qr_partitions(500, (8, 8, 8)), 500),
+        (crt_partitions(90, (9, 11)), 90),
+    ]:
+        cert = certify_partitions(parts, size)
+        assert cert.injective and cert.exact, cert
+
+
+def test_certifier_pigeonhole_exact_negative():
+    from repro.analysis.injectivity import certify_partitions
+    from repro.core.partitions import RemainderPartition
+    cert = certify_partitions(
+        [RemainderPartition(size=100, num_buckets=7, m=7)], 100)
+    assert not cert.injective and cert.exact
+    assert cert.method == "pigeonhole"
+
+
+def test_certifier_matches_brute_force_on_random_families():
+    from repro.analysis.injectivity import certify_partitions
+    from repro.core.partitions import ExplicitPartition, is_complementary
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        size = int(rng.integers(20, 200))
+        k = int(rng.integers(1, 4))
+        parts = []
+        for _ in range(k):
+            buckets = int(rng.integers(2, size + 1))
+            parts.append(ExplicitPartition(
+                size=size, num_buckets=buckets,
+                table=rng.integers(0, buckets, size)))
+        cert = certify_partitions(parts, size)
+        assert cert.exact     # brute force below the cap is always exact
+        assert cert.injective == is_complementary(parts, size)
+
+
+def test_certifier_sampling_fallback_is_honest():
+    from repro.analysis.injectivity import (COMPLEMENTARY_CHECK_MAX,
+                                            certify_partitions)
+    from repro.core.partitions import ExplicitPartition, RemainderPartition
+    size = COMPLEMENTARY_CHECK_MAX + 50_000
+    # an injective family the structural prover does not recognize
+    # (explicit permutation table) above the brute cap: sampling finds no
+    # collision and must NOT claim exactness
+    perm = np.random.default_rng(1).permutation(size)
+    cert = certify_partitions(
+        [ExplicitPartition(size=size, num_buckets=size, table=perm)], size)
+    assert cert.injective and not cert.exact and cert.method == "sampled"
+    # a non-injective family above the cap: every id collides with its
+    # partner at lcm distance, the sample catches one -> still exact
+    parts = [RemainderPartition(size=size, num_buckets=m, m=m)
+             for m in (500, 502)]
+    cert = certify_partitions(parts, size)
+    assert not cert.injective and cert.exact and cert.method == "sampled"
+
+
+def test_bad_plan_artifact_reports_without_raising():
+    from repro.analysis.injectivity import certify_plan
+    from repro.plan.memory_plan import MemoryPlan
+    plan = MemoryPlan.load(os.path.join(REPO, FIXTURES, "bad_plan.json"))
+    findings, row = certify_plan(plan, "bad_plan.json")
+    assert len(findings) == 1 and "table 0" in findings[0].message
+    certs = {c["feature"]: c for c in row["certificates"]}
+    assert certs[0]["injective"] is False and certs[0]["exact"] is True
+    assert certs[1]["injective"] is True    # the qr table is fine
+
+
+def test_hash_tables_are_lossy_by_design():
+    from repro.analysis.injectivity import certify_table
+    from repro.plan.memory_plan import TablePlan
+    t = TablePlan(feature=0, num_categories=100, kind="hash",
+                  num_collisions=4)
+    required, cert, _ = certify_table(t, 16)
+    assert not required and not cert.injective
+
+
+# ------------------------------------------- compile-count introspection
+
+def _small_engine():
+    import jax
+    from repro.core.factory import EmbeddingSpec
+    from repro.models.dlrm import DLRMConfig, dlrm_init
+    from repro.serve.quantize import quantize_params
+    from repro.serve.recsys import RecsysEngine
+    cfg = DLRMConfig(table_sizes=(100, 500, 33), emb_dim=16,
+                     bottom_mlp=(32, 16), top_mlp=(32,),
+                     embedding=EmbeddingSpec(kind="qr", num_collisions=4,
+                                             threshold=40))
+    params = quantize_params(dlrm_init(jax.random.PRNGKey(0), cfg))
+    return RecsysEngine(cfg, params, max_batch=8)
+
+
+def test_compile_count_counts_and_is_replay_stable():
+    eng = _small_engine()
+    reqs = [(np.zeros(13), [[1], [2, 3], [4]]) for _ in range(4)]
+    for d, b in reqs:
+        eng.submit(d, b)
+    eng.run_until_drained()
+    cc = eng.compile_count()
+    assert set(cc["per_program"]) <= {"embed", "dense", "slab", "fast",
+                                     "sharded_embed", "sharded_dense",
+                                     "sharded_fast"}
+    assert cc["total"] >= 1
+    for d, b in reqs:                      # identical shapes: no growth
+        eng.submit(d, b)
+    eng.run_until_drained()
+    assert eng.compile_count()["total"] == cc["total"]
+
+
+def test_jit_cache_watcher_bounds_hold():
+    from repro.analysis.jit_audit import replay_and_audit
+    findings, tel = replay_and_audit(_small_engine())
+    assert findings == []
+    per = tel["first_pass"]["per_program"]
+    assert per["embed"] <= tel["bounds"]["embed"]
+    assert tel["replay"]["total"] == tel["first_pass"]["total"]
+
+
+# -------------------------------------------------- support novelty rate
+
+def test_unseen_id_rate_in_report():
+    from repro.core.factory import EmbeddingSpec, make_embedding
+    from repro.obs.collision import CollisionTelemetry
+    sizes = (50, 60)
+    spec = EmbeddingSpec(kind="qr", num_collisions=4, threshold=1)
+    modules = [make_embedding(s, 8, spec) for s in sizes]
+    t = CollisionTelemetry(sizes)
+    assert t.unseen_id_rate(0) is None     # no baseline yet
+    t.set_baseline([np.arange(25), np.arange(30)])
+    idx = np.array([[[0, 24], [29, 30]],
+                    [[49, 1], [31, 2]]])   # (B=2, F=2, L=2)
+    t.record(idx, np.ones_like(idx, float))
+    # feature 0 served {0,24,49,1}: 49 is novel -> 1/4
+    # feature 1 served {29,30,31,2}: 30,31 novel -> 2/4
+    assert t.unseen_id_rate(0) == pytest.approx(0.25)
+    assert t.unseen_id_rate(1) == pytest.approx(0.5)
+    rows = t.report(modules)
+    assert rows[0]["unseen_id_rate"] == pytest.approx(0.25)
+    t.reset()
+    assert t.unseen_id_rate(0) == 0.0      # baseline survives the reset
+
+
+# --------------------------------------------------- subprocess CI shape
+
+def _cli_env(**extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    env.update(extra)
+    return env
+
+
+@pytest.mark.slow
+def test_cli_full_run_clean_tree_exits_zero(tmp_path):
+    out = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--format", "github",
+         "--out", str(out)],
+        cwd=REPO, env=_cli_env(), capture_output=True, text=True,
+        timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rep = json.loads(out.read_text())
+    assert rep["ok"] is True
+    assert {p["id"] for p in rep["passes"]} >= {
+        "ACC-001", "JIT-001", "OBS-001", "DET-001", "EXC-001", "DON-001",
+        "ACC-002", "WIRE-001", "JIT-002", "INJ-001"}
+
+
+@pytest.mark.slow
+def test_cli_injected_wire_mismatch_exits_one():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--select", "WIRE-001"],
+        cwd=REPO, env=_cli_env(REPRO_ANALYSIS_INJECT="wire"),
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "WIRE-001" in proc.stdout

@@ -148,7 +148,8 @@ def test_constrain_batch_noop_outside_mesh():
 
 def test_constrain_noop_under_jit_without_mesh():
     x = jnp.ones((8, 4))
-    out = jax.jit(lambda a: constrain(a, "dp", "model"))(x)
+    f = jax.jit(lambda a: constrain(a, "dp", "model"))
+    out = f(x)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
 
 
@@ -156,7 +157,8 @@ def test_constrain_is_identity_math_inside_mesh():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     x = jnp.arange(32.0).reshape(8, 4)
     with mesh:
-        out = jax.jit(lambda a: constrain(a, "dp", "model") * 2.0)(x)
+        f = jax.jit(lambda a: constrain(a, "dp", "model") * 2.0)
+        out = f(x)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x) * 2.0)
 
 
@@ -171,8 +173,9 @@ def test_constrain_skips_manual_axes_in_shard_map():
         return constrain_batch(a) + 1.0
 
     with mesh:
-        out = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
-                                out_specs=P("data"), check_rep=False))(x)
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
+                              out_specs=P("data"), check_rep=False))
+        out = f(x)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x) + 1.0)
 
 

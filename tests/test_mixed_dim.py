@@ -202,7 +202,7 @@ def test_mixed_dim_engine_cache_parity_empty_bags():
     qp = quantize_params(params)
     rng = np.random.default_rng(5)
     reqs = []
-    for r in range(12):
+    for _ in range(12):
         bags = [list(rng.integers(0, s, int(rng.integers(0, 3))))
                 for s in SIZES]
         reqs.append((rng.normal(size=13), bags))

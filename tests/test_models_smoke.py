@@ -26,7 +26,8 @@ def _setup(arch):
 @pytest.mark.parametrize("arch", ASSIGNED + ["dlrm-criteo", "dcn-criteo"])
 def test_forward_and_train_step(arch):
     api, params, batch = _setup(arch)
-    loss, metrics = jax.jit(api.loss_fn)(params, batch)
+    loss_fn = jax.jit(api.loss_fn)
+    loss, metrics = loss_fn(params, batch)
     assert np.isfinite(float(loss)), arch
     assert float(loss) > 0
     # one SGD step must change params and keep loss finite
@@ -49,7 +50,8 @@ def test_decode_step(arch):
     b, max_len = 2, 16
     cache = api.make_cache(b, max_len)
     tokens = jnp.zeros((b, 1), jnp.int32)
-    logits, new_cache = jax.jit(api.decode)(params, tokens, 3, cache)
+    decode = jax.jit(api.decode)
+    logits, new_cache = decode(params, tokens, 3, cache)
     vocab = getattr(api.cfg, "vocab", None) or api.cfg.lm.vocab
     assert logits.shape == (b, 1, vocab)
     assert np.isfinite(np.asarray(logits)).all(), arch
@@ -73,7 +75,8 @@ def test_prefill_consistency(arch):
         structs = api.prefill_inputs(Shape("x", s, b, "prefill"))
         if len(structs) > 1:  # multimodal prefix (frames/patches)
             extra = tuple(jnp.zeros(st.shape, st.dtype) for st in structs[:-1])
-    logits, cache2 = jax.jit(api.prefill)(params, *extra, tokens, cache)
+    prefill = jax.jit(api.prefill)
+    logits, cache2 = prefill(params, *extra, tokens, cache)
     assert logits.shape[0] == b and np.isfinite(np.asarray(logits)).all()
 
 

@@ -417,7 +417,7 @@ def test_engine_empty_bags_match_oracle():
     params = quantize_params(dlrm_init(jax.random.PRNGKey(0), cfg))
     rng = np.random.default_rng(3)
     reqs = []
-    for r in range(10):
+    for _ in range(10):
         bags = [list(rng.integers(0, s, int(rng.integers(0, 3))))
                 for s in SIZES]           # 0 => empty bag
         reqs.append((rng.normal(size=13), bags))
